@@ -1,0 +1,66 @@
+"""ADMM solver scalability (§V-C): wall time + quality vs node count, and
+paper-faithful BiCGSTAB+ILU X-step vs the matrix-free Schur-complement CG
+(beyond-paper; DESIGN.md §6).
+
+  PYTHONPATH=src python -m benchmarks.bench_admm --nodes 8,16,32,64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.admm import ADMMConfig, HomogeneousADMM
+from repro.core.api import extract_support, repair_selection
+from repro.core.graph import all_edges, weight_matrix_from_weights, r_asym
+from repro.core.weights import metropolis_weights, polish_weights
+
+
+def solve_once(n: int, r: int, solver_kind: str, iters: int, seed: int) -> dict:
+    cfg = ADMMConfig(max_iters=iters, solver=solver_kind)  # noqa: repeated for clarity
+    solver = HomogeneousADMM(n, r, cfg)
+    rng = np.random.default_rng(seed)
+    m = len(all_edges(n))
+    g0 = np.zeros(m)
+    g0[rng.choice(m, size=min(r, m), replace=False)] = 1.0 / max(r, 1)
+    t0 = time.time()
+    res = solver.solve(g0=g0, lam0=0.3)
+    dt = time.time() - t0
+    sel = extract_support(n, res.g + res.g_raw, r, 1e-6)
+    sel = repair_selection(n, sel, res.g + res.g_raw, None)
+    edges = [e for e, s in zip(all_edges(n), sel) if s]
+    g = polish_weights(n, edges, metropolis_weights(n, edges), iters=300) \
+        if edges else np.zeros(0)
+    W = weight_matrix_from_weights(n, edges, g)
+    return {"n": n, "r": r, "solver": solver_kind, "solve_s": round(dt, 2),
+            "admm_iters": res.iters, "residual": float(res.residual),
+            "r_asym": round(float(r_asym(W)), 4) if edges else 1.0}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", default="8,16,32")
+    ap.add_argument("--iters", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    print("== ADMM solver scalability (§V-C) ==")
+    rows = []
+    for n in [int(x) for x in args.nodes.split(",")]:
+        for kind in ("kkt_bicgstab_ilu", "schur_cg"):
+            try:
+                row = solve_once(n, 2 * n, kind, args.iters, args.seed)
+            except Exception as e:
+                row = {"n": n, "solver": kind, "error": str(e)}
+            rows.append(row)
+            print("  " + json.dumps(row))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Consensus speed vs wall-clock across topologies — paper Figs 1, 2, 4, 6.
+
+  PYTHONPATH=src python -m benchmarks.bench_consensus --scenario homo
+  PYTHONPATH=src python -m benchmarks.bench_consensus --scenario node
+  PYTHONPATH=src python -m benchmarks.bench_consensus --scenario intra --n 8
+  PYTHONPATH=src python -m benchmarks.bench_consensus --scenario bcube
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import bcube_constraints, intra_server_constraints
+from repro.core.consensus import simulate_consensus, time_to_error
+
+from .common import NODE_BW_16, ba_topo, edge_b_min, paper_baselines
+
+
+def run(scenario: str, n: int, iters: int, sa_iters: int, seed: int) -> list[dict]:
+    cs = None
+    node_bw = None
+    if scenario == "node":
+        node_bw = NODE_BW_16[:n] if n <= 16 else np.array(
+            [9.76] * (n // 2) + [3.25] * (n - n // 2))
+    elif scenario == "intra":
+        cs = intra_server_constraints(n)
+    elif scenario == "bcube":
+        p = int(round(np.sqrt(n)))
+        cs = bcube_constraints(p=p, k=2)
+
+    topos = paper_baselines(n, scenario)
+    # BA-Topo at the paper's edge budgets for each figure
+    budgets = {"homo": (16, 24, 32), "node": (16, 32, 48),
+               "intra": (8, 12, 16), "bcube": (24, 48)}[scenario]
+    for r in budgets:
+        try:
+            t = ba_topo(n, r, scenario, node_bw=node_bw, cs=cs,
+                        seed=seed, sa_iters=sa_iters)
+            t.meta["label"] = f"ba-topo(r={len(t.edges)})"
+            topos.append(t)
+        except Exception as e:
+            print(f"  [warn] ba-topo r={r}: {e}")
+
+    rows = []
+    for topo in topos:
+        b_min = edge_b_min(topo, scenario, node_bw=node_bw, cs=cs)
+        trace = simulate_consensus(topo, iters=iters, b_min=b_min, seed=seed)
+        rows.append({
+            "topology": topo.meta.get("label", topo.name),
+            "edges": len(topo.edges),
+            "r_asym": round(float(topo.r_asym()), 4),
+            "b_min": round(b_min, 3),
+            "t_iter_ms": round(trace.t_iter_ms, 3),
+            "t_converge_ms": round(time_to_error(trace, 1e-4), 1),
+            "err@50iters": float(trace.errors[min(50, iters)] / trace.errors[0]),
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="homo",
+                    choices=["homo", "node", "intra", "bcube"])
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=400)
+    ap.add_argument("--sa-iters", type=int, default=800)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    n = args.n or (8 if args.scenario == "intra" else 16)
+
+    print(f"== consensus speed, scenario={args.scenario}, n={n} "
+          f"(paper Fig {'1' if args.scenario == 'homo' else '2' if args.scenario == 'node' else '4' if args.scenario == 'intra' else '6'}) ==")
+    rows = run(args.scenario, n, args.iters, args.sa_iters, args.seed)
+    hdr = ["topology", "edges", "r_asym", "b_min", "t_iter_ms", "t_converge_ms"]
+    print(" | ".join(f"{h:>22}" for h in hdr))
+    for row in sorted(rows, key=lambda r: r["t_converge_ms"]):
+        print(" | ".join(f"{str(row[h]):>22}" for h in hdr))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Pallas kernel validation + micro-timing vs the pure-jnp oracles.
+
+On this CPU container the kernels execute in interpret mode (correctness);
+the BlockSpec tiling is the TPU deployment artifact. Reports max|err| vs
+ref.py and per-call wall time (interpret-mode timing is NOT TPU perf —
+recorded only to catch pathological regressions).
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e3
+
+
+def bench_gossip_mix(rows: list) -> None:
+    from repro.kernels.gossip_mix import ops, ref
+    key = jax.random.PRNGKey(0)
+    for shape, deg in [((1024,), 2), ((4096, 384), 4), ((1000, 131), 3)]:
+        x = jax.random.normal(key, shape)
+        nbrs = jax.random.normal(jax.random.PRNGKey(1), (deg,) + shape)
+        w = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (deg + 1,)))
+        w = w / w.sum()
+        out_k = ops.gossip_mix(x, nbrs, w, use_kernel=True)
+        out_r = ref.gossip_mix(x, nbrs, w)
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
+        rows.append({"kernel": "gossip_mix", "shape": str(shape), "deg": deg,
+                     "max_err": err,
+                     "ms_kernel": round(_time(lambda: ops.gossip_mix(x, nbrs, w)), 2),
+                     "ms_ref": round(_time(lambda: ref.gossip_mix(x, nbrs, w)), 2)})
+
+
+def bench_decode_attention(rows: list) -> None:
+    from repro.kernels.decode_attention import ops, ref
+    key = jax.random.PRNGKey(0)
+    for (B, C, Hkv, g, hd) in [(2, 512, 2, 2, 64), (4, 1024, 4, 1, 128)]:
+        q = jax.random.normal(key, (B, Hkv * g, hd))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, C, Hkv, hd))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, C, Hkv, hd))
+        valid = jnp.arange(C) < (C // 2)
+        out_k = ops.decode_attention(q, k, v, valid)
+        out_r = ref.decode_attention(q, k, v, valid)
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
+        rows.append({"kernel": "decode_attention", "shape": f"B{B}_C{C}_H{Hkv}x{g}_d{hd}",
+                     "max_err": err,
+                     "ms_kernel": round(_time(lambda: ops.decode_attention(q, k, v, valid)), 2),
+                     "ms_ref": round(_time(lambda: ref.decode_attention(q, k, v, valid)), 2)})
+
+
+def bench_ssd_scan(rows: list) -> None:
+    from repro.kernels.ssd_scan import ops, ref
+    key = jax.random.PRNGKey(0)
+    for (B, nc, Q, H, P, N) in [(2, 2, 64, 4, 32, 32), (1, 4, 128, 8, 64, 64)]:
+        xc = jax.random.normal(key, (B, nc, Q, H, P)) * 0.3
+        dtc = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, nc, Q, H)))
+        A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.3)
+        la = jnp.cumsum(A[None, None, None, :] * dtc, axis=2)
+        Bc = jax.random.normal(jax.random.PRNGKey(3), (B, nc, Q, N)) * 0.3
+        Cc = jax.random.normal(jax.random.PRNGKey(4), (B, nc, Q, N)) * 0.3
+        yk, sk = ops.ssd_intra_chunk(xc, dtc, la, Bc, Cc)
+        yr, sr = ref.ssd_intra_chunk(xc, dtc, la, Bc, Cc)
+        err = max(float(jnp.max(jnp.abs(yk - yr))), float(jnp.max(jnp.abs(sk - sr))))
+        rows.append({"kernel": "ssd_scan", "shape": f"B{B}_c{nc}x{Q}_H{H}_P{P}_N{N}",
+                     "max_err": err,
+                     "ms_kernel": round(_time(lambda: ops.ssd_intra_chunk(xc, dtc, la, Bc, Cc)), 2),
+                     "ms_ref": round(_time(lambda: ref.ssd_intra_chunk(xc, dtc, la, Bc, Cc)), 2)})
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    rows: list = []
+    print("== Pallas kernels vs jnp oracles (interpret mode) ==")
+    bench_gossip_mix(rows)
+    bench_decode_attention(rows)
+    bench_ssd_scan(rows)
+    bad = [r for r in rows if r["max_err"] > 2e-2]
+    for r in rows:
+        print("  " + json.dumps(r))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+    if bad:
+        raise SystemExit(f"kernel mismatch: {bad}")
+    print("all kernels match their oracles.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Roofline table from the dry-run artifacts (deliverable (g)).
+
+Reads benchmarks/artifacts/dryrun_*.json (written by repro.launch.dryrun)
+and prints the three-term roofline per (arch × shape × mesh) with the
+dominant bottleneck and the MODEL_FLOPS/analytic-FLOPs useful ratio.
+
+  PYTHONPATH=src python -m benchmarks.bench_roofline
+  PYTHONPATH=src python -m benchmarks.bench_roofline --mesh 2x16x16
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load(mesh: str | None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "dryrun_*.json"))):
+        tag = os.path.basename(path)[len("dryrun_"):-len(".json")]
+        if mesh and not tag.startswith(mesh):
+            continue
+        with open(path) as f:
+            recs.extend(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if "skipped" in r:
+        return (f"{r['arch']:>22} {r['shape']:>12} {r['mesh']:>8} "
+                f"{'—':>10} {'—':>10} {'—':>10} {'skip':>10}  {r['skipped']}")
+    if "error" in r:
+        return (f"{r['arch']:>22} {r['shape']:>12} {r['mesh']:>8} "
+                f"{'—':>10} {'—':>10} {'—':>10} {'FAIL':>10}  {r['error'][:60]}")
+    return (f"{r['arch']:>22} {r['shape']:>12} {r['mesh']:>8} "
+            f"{r['compute_s']:>10.2e} {r['memory_s']:>10.2e} "
+            f"{r['collective_s']:>10.2e} {r['dominant']:>10} "
+            f"useful={r['useful_ratio']:.2f} hbm/dev={r.get('hbm_per_device_gb', '—')}GB")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    recs = load(args.mesh)
+    if not recs:
+        print("no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    print(f"{'arch':>22} {'shape':>12} {'mesh':>8} {'compute_s':>10} "
+          f"{'memory_s':>10} {'collect_s':>10} {'dominant':>10}")
+    for r in recs:
+        print(fmt_row(r))
+    ok = [r for r in recs if "compute_s" in r]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\n{len(ok)} compiled combos; dominant-term histogram: {doms}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(recs, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

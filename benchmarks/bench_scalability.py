@@ -1,0 +1,75 @@
+"""Scalability across node counts — paper Table I.
+
+Asymptotic convergence factor + convergence time (consensus error ≤ 1e-4)
+for exponential vs U-EquiStatic vs BA-Topo, with BA-Topo's edge budget at
+half the exponential graph's degree sum (the paper's sparsity protocol).
+
+  PYTHONPATH=src python -m benchmarks.bench_scalability --nodes 4,8,16,32,64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import make_baseline
+from repro.core.consensus import simulate_consensus, time_to_error
+
+from .common import ba_topo, edge_b_min
+
+
+def run(nodes: list[int], iters: int, sa_iters: int, seed: int) -> list[dict]:
+    rows = []
+    for n in nodes:
+        expo = make_baseline("exponential", n)
+        # paper: Σdeg(BA) = ½ Σdeg(exp); undirected edge count = Σdeg/2
+        r_budget = max(len(expo.edges) // 2, n)
+        try:
+            equi = make_baseline("equistatic", n,
+                                 M=max(1, int(np.ceil(np.log2(n)) // 2)))
+        except Exception:
+            equi = None
+        t0 = time.time()
+        ba = ba_topo(n, r_budget, "homo", seed=seed, sa_iters=sa_iters)
+        solve_s = time.time() - t0
+        for topo, label in [(expo, "exponential"), (equi, "u-equistatic"),
+                            (ba, "ba-topo")]:
+            if topo is None:
+                continue
+            b_min = edge_b_min(topo, "homo")
+            tr = simulate_consensus(topo, iters=iters, b_min=b_min, seed=seed)
+            rows.append({
+                "n": n, "topology": label, "edges": len(topo.edges),
+                "r_asym": round(float(topo.r_asym()), 3),
+                "t_converge_ms": round(time_to_error(tr, 1e-4), 1),
+                "solve_s": round(solve_s, 1) if label == "ba-topo" else None,
+            })
+        print(f"  n={n} done ({solve_s:.1f}s ADMM)")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", default="4,8,16,32,64")
+    ap.add_argument("--iters", type=int, default=600)
+    ap.add_argument("--sa-iters", type=int, default=600)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+    nodes = [int(x) for x in args.nodes.split(",")]
+
+    print("== scalability (paper Table I) ==")
+    rows = run(nodes, args.iters, args.sa_iters, args.seed)
+    print(f"{'n':>5} {'topology':>14} {'edges':>6} {'r_asym':>7} {'t_conv_ms':>10}")
+    for r in rows:
+        print(f"{r['n']:>5} {r['topology']:>14} {r['edges']:>6} "
+              f"{r['r_asym']:>7} {r['t_converge_ms']:>10}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

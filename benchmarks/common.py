@@ -1,0 +1,69 @@
+"""Shared benchmark helpers: baseline topology sets per paper scenario."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    BATopoConfig,
+    bcube_constraints,
+    intra_server_constraints,
+    make_baseline,
+    optimize_topology,
+)
+from repro.core.bandwidth import (
+    PaperConstants,
+    homo_edge_bandwidth,
+    min_edge_bandwidth,
+    node_hetero_edge_bandwidth,
+)
+from repro.core.graph import Topology
+
+PC = PaperConstants()
+
+# §VI-A2: 3:3:…:1:1 node bandwidth ratios, 9.76 / 3.25 GB/s
+NODE_BW_16 = np.array([9.76] * 8 + [3.25] * 8)
+
+
+def paper_baselines(n: int, scenario: str) -> list[Topology]:
+    """The comparison set of Figs 1/2/4/6: ring, 2D grid, 2D torus,
+    exponential, U-EquiStatic."""
+    out = [make_baseline("ring", n), make_baseline("exponential", n)]
+    if int(np.sqrt(n)) ** 2 == n:
+        out.insert(1, make_baseline("grid", n))
+        out.insert(2, make_baseline("torus", n))
+    for M in (2, 3):
+        try:
+            t = make_baseline("equistatic", n, M=M)
+            t.meta["label"] = f"u-equistatic(r={len(t.edges)})"
+            out.append(t)
+        except Exception:
+            pass
+    return out
+
+
+def edge_b_min(topo: Topology, scenario: str, node_bw: np.ndarray | None = None,
+               cs=None) -> float:
+    """Minimum per-edge bandwidth under the scenario's sharing rule."""
+    if scenario == "node":
+        bw = node_hetero_edge_bandwidth(topo, node_bw)
+    elif scenario in ("intra", "bcube") and cs is not None:
+        from repro.core.graph import all_edges, edge_index
+        eidx = edge_index(topo.n)
+        sel = np.zeros(len(all_edges(topo.n)), dtype=bool)
+        for e in topo.edges:
+            sel[eidx[tuple(sorted(e))]] = True
+        full = np.asarray(cs.edge_bandwidth(sel))
+        bw = full[sel]
+    else:
+        bw = homo_edge_bandwidth(topo)
+    return min_edge_bandwidth(np.asarray(bw))
+
+
+def ba_topo(n: int, r: int, scenario: str = "homo", *, node_bw=None, cs=None,
+            seed: int = 0, sa_iters: int = 800) -> Topology:
+    cfg = BATopoConfig(seed=seed, sa_iters=sa_iters)
+    if scenario == "homo":
+        return optimize_topology(n, r, "homo", cfg=cfg)
+    if scenario == "node":
+        return optimize_topology(n, r, "node", node_bandwidths=node_bw, cfg=cfg)
+    return optimize_topology(n, r, "constraint", cs=cs, cfg=cfg)

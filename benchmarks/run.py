@@ -1,0 +1,78 @@
+"""Benchmark driver: one entry per paper table/figure + system benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick versions of all
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
+
+Individual benchmarks (full CLIs):
+  benchmarks.bench_consensus      Figs 1 / 2 / 4 / 6
+  benchmarks.bench_scalability    Table I
+  benchmarks.bench_training_time  Table II, Figs 7–10
+  benchmarks.bench_admm           §V-C solver scalability
+  benchmarks.bench_kernels        Pallas kernels vs oracles
+  benchmarks.bench_roofline       dry-run roofline table (deliverable g)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow: ~1h)")
+    args = ap.parse_args(argv)
+    os.makedirs(ART, exist_ok=True)
+    quick = not args.full
+
+    from . import (bench_admm, bench_compression, bench_consensus,
+                   bench_dynamic, bench_kernels, bench_roofline,
+                   bench_scalability, bench_training_time)
+
+    t0 = time.time()
+    sa = "300" if quick else "1500"
+
+    for scenario in (["homo", "node"] if quick else ["homo", "node", "intra", "bcube"]):
+        print(f"\n### bench_consensus --scenario {scenario}")
+        bench_consensus.main(["--scenario", scenario, "--sa-iters", sa,
+                              "--iters", "300" if quick else "600",
+                              "--json-out", f"{ART}/consensus_{scenario}.json"])
+
+    print("\n### bench_scalability (Table I)")
+    bench_scalability.main(["--nodes", "4,8,16" if quick else "4,8,16,32,64,128",
+                            "--sa-iters", sa,
+                            "--json-out", f"{ART}/scalability.json"])
+
+    print("\n### bench_training_time (Table II)")
+    for scenario in (["homo"] if quick else ["homo", "node", "intra", "bcube"]):
+        bench_training_time.main(["--scenario", scenario,
+                                  "--epochs", "12" if quick else "40",
+                                  "--sa-iters", sa,
+                                  "--json-out", f"{ART}/training_{scenario}.json"])
+
+    print("\n### bench_admm (§V-C)")
+    bench_admm.main(["--nodes", "8,16" if quick else "8,16,32,64",
+                     "--iters", "100" if quick else "400",
+                     "--json-out", f"{ART}/admm.json"])
+
+    print("\n### bench_dynamic (beyond-paper: time-varying gossip)")
+    bench_dynamic.main(["--json-out", f"{ART}/dynamic.json"])
+
+    print("\n### bench_compression (beyond-paper: CHOCO gossip)")
+    bench_compression.main(["--iters", "800" if quick else "3000",
+                            "--json-out", f"{ART}/compression.json"])
+
+    print("\n### bench_kernels")
+    bench_kernels.main(["--json-out", f"{ART}/kernels.json"])
+
+    print("\n### bench_roofline (from dry-run artifacts)")
+    bench_roofline.main([])
+
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s; artifacts in {ART}/")
+
+
+if __name__ == "__main__":
+    main()

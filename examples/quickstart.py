@@ -1,0 +1,43 @@
+"""Quickstart: design a BA-Topo, inspect it, and gossip with it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's pipeline end to end on n = 16 workers:
+  1. optimize the topology under an edge budget (Eq. 9 → Algorithm 2),
+  2. compare its consensus speed against ring / exponential (Fig. 1),
+  3. compile the topology into a TPU collective schedule and verify the
+     ppermute rounds reproduce x ← W x exactly.
+"""
+import numpy as np
+
+from repro.core import BATopoConfig, make_baseline, optimize_topology
+from repro.core.bandwidth import homo_edge_bandwidth, min_edge_bandwidth
+from repro.core.consensus import simulate_consensus, time_to_error
+from repro.core.graph import weight_matrix_from_weights
+from repro.dsgd import bytes_per_sync, reconstruct_weight_matrix, schedule_from_topology
+
+N, R = 16, 32
+
+print(f"=== 1. BA-Topo for n={N}, edge budget r={R} (paper Eq. 9) ===")
+topo = optimize_topology(N, R, "homo", cfg=BATopoConfig(sa_iters=800))
+print(f"  edges={len(topo.edges)}  r_asym={topo.r_asym():.4f} "
+      f"(paper Table I @ n=16: 0.52)")
+print(f"  selected_from={topo.meta.get('selected_from')}")
+
+print("\n=== 2. consensus speed vs baselines (paper Fig. 1) ===")
+for t in [topo, make_baseline("exponential", N), make_baseline("ring", N)]:
+    b_min = min_edge_bandwidth(homo_edge_bandwidth(t))
+    tr = simulate_consensus(t, iters=400, b_min=b_min)
+    print(f"  {t.name:>24}: edges={len(t.edges):>3} r_asym={t.r_asym():.3f} "
+          f"t_iter={tr.t_iter_ms:.1f}ms  t(err≤1e-4)={time_to_error(tr):.0f}ms")
+
+print("\n=== 3. TPU collective schedule (gossip as ppermute rounds) ===")
+sched = schedule_from_topology(topo)
+W = weight_matrix_from_weights(N, topo.edges, topo.g)
+assert np.allclose(reconstruct_weight_matrix(sched), W, atol=1e-12)
+traffic = bytes_per_sync(sched, param_bytes=4 * 135_000_000)  # a 135M f32 model
+print(f"  {sched.rounds} matching rounds (max degree "
+      f"{int(sched.degrees.max())}); schedule reproduces W exactly")
+print(f"  gossip bytes/worker: {traffic['per_worker_max'] / 1e6:.0f} MB vs "
+      f"all-reduce {traffic['allreduce_per_worker'] / 1e6:.0f} MB")
+print("\nquickstart OK")

@@ -1,0 +1,33 @@
+"""Batched serving example: prefill + KV-cache decode on three architecture
+families (dense GQA, SSM, hybrid), greedy and sampled.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_arch, reduced_for_smoke
+from repro.models import transformer
+from repro.serve import ServeConfig, ServingEngine
+
+for arch, note in [("qwen1.5-0.5b", "dense GQA + QKV bias"),
+                   ("mamba2-780m", "attention-free SSD"),
+                   ("zamba2-2.7b", "Mamba2 + shared attention")]:
+    cfg = reduced_for_smoke(get_arch(arch))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(batch_size=4, cache_len=96, max_new_tokens=24,
+                       temperature=0.7)
+    engine = ServingEngine(cfg, params, scfg, eos_id=-1)
+    prompts = np.random.default_rng(0).integers(
+        1, cfg.vocab_size, (4, 16)).astype(np.int32)
+    t0 = time.time()
+    out = engine.generate(prompts, seed=0)
+    dt = time.time() - t0
+    assert out.shape == (4, 24) and (out >= 0).all()
+    print(f"{arch:>14} [{note}]: {out.size} tokens in {dt:.1f}s — "
+          f"req0 → {out[0, :10].tolist()}…")
+
+print("batched serving OK")

@@ -1,0 +1,4 @@
+"""Checkpointing (npz-based — offline container has no orbax/msgpack)."""
+from .store import CheckpointManager, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,99 @@
+"""Pytree checkpoints as flat .npz archives.
+
+Leaves are addressed by their pytree key-path string, so any nest of
+dict/NamedTuple/tuple round-trips without pickling (safe + portable). The
+tree *structure* is restored from a template (the freshly-initialized
+state), which is how production JAX trainers (orbax restore w/ item arg)
+behave.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import numpy as np
+
+import jax
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    """Atomic write (tmp + rename) of a pytree to ``path`` (.npz)."""
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_checkpoint(path: str, template):
+    """Restore a pytree saved by save_checkpoint into ``template``'s structure.
+    Returns (tree, step|None)."""
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    step = int(data.pop("__step__")) if "__step__" in data else None
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(template)
+    paths, treedef = leaves_with_paths[0], leaves_with_paths[1]
+    new_leaves = []
+    for path_k, leaf in paths:
+        key = jax.tree_util.keystr(path_k)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} vs template {np.shape(leaf)}")
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+class CheckpointManager:
+    """Rolling checkpoints: ckpt_<step>.npz under a directory, keep last k."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.directory):
+            m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, tree, step: int) -> str:
+        path = os.path.join(self.directory, f"ckpt_{step}.npz")
+        save_checkpoint(path, tree, step=step)
+        for s in self._steps()[:-self.keep]:
+            os.unlink(os.path.join(self.directory, f"ckpt_{s}.npz"))
+        return path
+
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.directory, f"ckpt_{step}.npz")
+        return load_checkpoint(path, template)

@@ -1,0 +1,24 @@
+"""BA-Topo core: the paper's contribution as a composable library."""
+from .admm import ADMMConfig, ADMMResult, HeterogeneousADMM, HomogeneousADMM
+from .allocation import AllocationResult, allocate_edge_capacity
+from .api import BATopoConfig, optimize_topology
+from .bandwidth import PaperConstants, homo_edge_bandwidth, min_edge_bandwidth, node_hetero_edge_bandwidth, t_epoch, t_iter
+from .constraints import ConstraintSet, bcube_constraints, intra_server_constraints, node_level_constraints, pod_boundary_constraints
+from .graph import Topology, all_edges, aspl, incidence_matrix, is_connected, laplacian_from_weights, r_asym, weight_matrix_from_weights
+from .topologies import BASELINES, exponential, grid2d, hypercube, make_baseline, random_graph, ring, torus2d, u_equistatic
+from .weights import best_constant_weights, metropolis_weights, polish_weights
+
+__all__ = [
+    "ADMMConfig", "ADMMResult", "HeterogeneousADMM", "HomogeneousADMM",
+    "AllocationResult", "allocate_edge_capacity",
+    "BATopoConfig", "optimize_topology",
+    "PaperConstants", "homo_edge_bandwidth", "min_edge_bandwidth",
+    "node_hetero_edge_bandwidth", "t_epoch", "t_iter",
+    "ConstraintSet", "bcube_constraints", "intra_server_constraints",
+    "node_level_constraints", "pod_boundary_constraints",
+    "Topology", "all_edges", "aspl", "incidence_matrix", "is_connected",
+    "laplacian_from_weights", "r_asym", "weight_matrix_from_weights",
+    "BASELINES", "exponential", "grid2d", "hypercube", "make_baseline",
+    "random_graph", "ring", "torus2d", "u_equistatic",
+    "best_constant_weights", "metropolis_weights", "polish_weights",
+]

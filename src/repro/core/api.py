@@ -1,0 +1,309 @@
+"""High-level BA-Topo API: one call per paper scenario.
+
+Pipeline (the paper's full recipe, §IV–§VI):
+  1. scenario → ConstraintSet (M, e) and candidate-edge admissibility,
+  2. Algorithm 1 (node scenarios) → per-node edge capacities maximizing b_unit,
+  3. simulated-annealing warm start (low ASPL, feasible) [§VI],
+  4. Algorithm 2 ADMM (homogeneous Eq. 20 / heterogeneous Eq. 28),
+  5. support extraction + greedy feasibility repair (beyond paper, see
+     DESIGN.md §6) + convex weight polish,
+  6. keep the better of {warm start polished, ADMM polished} — the ADMM is
+     non-convex (cardinality / binary constraints), so this guards against
+     bad local points, mirroring the paper's initialization-sensitivity note.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .admm import ADMMConfig, HeterogeneousADMM, HomogeneousADMM
+from .allocation import allocate_edge_capacity
+from .anneal import anneal_topology, greedy_degree_graph
+from .constraints import ConstraintSet
+from .graph import Topology, all_edges, edge_index, is_connected, r_asym, weight_matrix_from_weights
+from .weights import metropolis_weights, polish_weights
+
+__all__ = ["BATopoConfig", "optimize_topology", "extract_support", "repair_selection"]
+
+
+@dataclass
+class BATopoConfig:
+    admm: ADMMConfig = field(default_factory=ADMMConfig)
+    sa_iters: int = 1500
+    polish_iters: int = 500
+    support_tol: float = 1e-6
+    seed: int = 0
+    restarts: int = 1
+
+
+def extract_support(
+    n: int, g: np.ndarray, r: int, tol: float, z: np.ndarray | None = None,
+    edge_ok: np.ndarray | None = None,
+) -> np.ndarray:
+    """Boolean selection over the full candidate edge list: top-r weights
+    (optionally gated by the binary z of the heterogeneous solver)."""
+    m = len(g)
+    score = np.asarray(g, dtype=np.float64).copy()
+    if z is not None:
+        score = score + 1e-3 * np.asarray(z)  # prefer z-selected edges on ties
+    if edge_ok is not None:
+        score[~edge_ok] = -np.inf
+    score[score <= tol] = -np.inf
+    k = min(r, int(np.isfinite(score).sum()))
+    sel = np.zeros(m, dtype=bool)
+    if k > 0:
+        idx = np.argpartition(-score, k - 1)[:k]
+        sel[idx] = True
+    return sel
+
+
+def repair_selection(n: int, sel: np.ndarray, g: np.ndarray, cs: ConstraintSet | None) -> np.ndarray:
+    """Greedy feasibility + connectivity repair of a rounded edge selection.
+
+    1. While a capacity row is violated (M z > e), drop the lowest-weight
+       selected edge contributing to the most-violated row.
+    2. While the graph is disconnected, add the highest-weight admissible
+       edge joining two components that does not violate capacities.
+    """
+    edges_full = all_edges(n)
+    eidx = edge_index(n)
+    sel = sel.copy()
+    g = np.asarray(g, dtype=np.float64)
+
+    if cs is not None:
+        while True:
+            usage = cs.M @ sel.astype(np.int64)
+            over = usage - cs.e_cap
+            if np.all(over <= 0):
+                break
+            row = int(np.argmax(over))
+            members = [l for l in np.nonzero(sel)[0] if cs.M[row, l]]
+            drop = min(members, key=lambda l: g[l])
+            sel[drop] = False
+
+    def comps(sel_mask):
+        parent = list(range(n))
+
+        def find(a):
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        for l in np.nonzero(sel_mask)[0]:
+            i, j = edges_full[l]
+            ri, rj = find(i), find(j)
+            if ri != rj:
+                parent[ri] = rj
+        return [find(i) for i in range(n)]
+
+    for _ in range(n):
+        c = comps(sel)
+        if len(set(c)) == 1:
+            break
+        cands = []
+        for l, (i, j) in enumerate(edges_full):
+            if sel[l] or c[i] == c[j]:
+                continue
+            if cs is not None:
+                if not cs.edge_ok[l]:
+                    continue
+                usage = cs.M @ sel.astype(np.int64)
+                if np.any(usage + cs.M[:, l] > cs.e_cap):
+                    continue
+            cands.append(l)
+        if not cands:
+            break  # cannot connect under capacities — caller handles r_asym=1
+        best = max(cands, key=lambda l: g[l])
+        sel[best] = True
+    return sel
+
+
+def _homo_degree_targets(n: int, r: int) -> np.ndarray:
+    """Balanced degree sequence with Σd = 2r (homogeneous Algorithm-1 limit)."""
+    base = (2 * r) // n
+    extra = (2 * r) % n
+    d = np.full(n, base, dtype=np.int64)
+    d[:extra] += 1
+    return np.minimum(d, n - 1)
+
+
+def _finalize(n: int, sel: np.ndarray, cfg: BATopoConfig, name: str,
+              cs: ConstraintSet | None, meta: dict) -> Topology:
+    edges_full = all_edges(n)
+    edges = [edges_full[l] for l in np.nonzero(sel)[0]]
+    if not edges or not is_connected(n, edges):
+        g = metropolis_weights(n, edges) if edges else np.zeros(0)
+        t = Topology(n, edges, g, name=name, meta={**meta, "connected": False})
+        return t
+    g0 = metropolis_weights(n, edges)
+    g = polish_weights(n, edges, g0, iters=cfg.polish_iters)
+    t = Topology(n, edges, g, name=name, meta={**meta, "connected": True})
+    return t
+
+
+def optimize_topology(
+    n: int,
+    r: int,
+    scenario: str = "homo",
+    cs: ConstraintSet | None = None,
+    node_bandwidths: np.ndarray | None = None,
+    cfg: BATopoConfig | None = None,
+) -> Topology:
+    """Produce a BA-Topo for the given scenario.
+
+    scenario ∈ {"homo", "node", "constraint"}:
+      - "homo": Eq. (9) with Card(g) ≤ r.
+      - "node": §IV-B1 — requires ``node_bandwidths``; Algorithm 1 allocates
+        per-node capacities, then the heterogeneous ADMM runs with equality
+        degree rows.
+      - "constraint": any ConstraintSet (intra-server, BCube, pod-boundary)
+        with inequality capacities.
+    """
+    cfg = cfg or BATopoConfig()
+    rng = np.random.default_rng(cfg.seed)
+    meta: dict = {"scenario": scenario, "r": r}
+
+    if scenario == "node":
+        assert node_bandwidths is not None
+        alloc = allocate_edge_capacity(np.asarray(node_bandwidths), r)
+        from .allocation import graphical_repair
+        from .constraints import node_level_constraints
+
+        e_alloc = graphical_repair(alloc.e)
+        cs = node_level_constraints(n, e_alloc, np.asarray(node_bandwidths))
+        meta["b_unit"] = alloc.b_unit
+        meta["alloc_e"] = e_alloc.tolist()
+        deg_targets = e_alloc
+    elif scenario == "constraint":
+        assert cs is not None
+        deg_targets = None
+    else:
+        deg_targets = _homo_degree_targets(n, r)
+
+    # ---- warm start ---------------------------------------------------------
+    best_topo: Topology | None = None
+
+    for restart in range(max(1, cfg.restarts)):
+        seed = cfg.seed + 1000 * restart
+        rng = np.random.default_rng(seed)
+        if deg_targets is not None:
+            warm_cs = cs if scenario == "node" else None
+            edges0 = greedy_degree_graph(n, deg_targets, rng, warm_cs)
+        else:
+            edges0 = _greedy_constraint_graph(n, r, cs, rng)
+        edges0 = anneal_topology(n, edges0, cs if scenario != "homo" else None,
+                                 iters=cfg.sa_iters, seed=seed)
+        eidx = edge_index(n)
+        m = len(all_edges(n))
+        z0 = np.zeros(m)
+        for e in edges0:
+            z0[eidx[e]] = 1.0
+        g0 = np.zeros(m)
+        gm = metropolis_weights(n, edges0)
+        for k, e in enumerate(edges0):
+            g0[eidx[e]] = gm[k]
+        W0 = weight_matrix_from_weights(n, edges0, gm)
+        lam0 = max(1.0 - r_asym(W0), 0.05)
+
+        warm_sel = z0.astype(bool)
+        warm_topo = _finalize(n, warm_sel, cfg, f"ba-topo(n={n},r={r},warm)", cs, dict(meta))
+
+        # ---- ADMM ------------------------------------------------------------
+        if scenario == "homo":
+            solver = HomogeneousADMM(n, r, cfg.admm)
+            res = solver.solve(g0=g0, lam0=lam0)
+            sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)
+        else:
+            solver = HeterogeneousADMM(
+                n, r, np.asarray(cs.M, dtype=np.float64), np.asarray(cs.e_cap, dtype=np.float64),
+                cfg.admm, equality=cs.equality, edge_ok=np.asarray(cs.edge_ok),
+            )
+            res = solver.solve(g0=g0, z0=z0, lam0=lam0)
+            sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol, z=res.z,
+                                  edge_ok=np.asarray(cs.edge_ok))
+        sel = repair_selection(n, sel, res.g + res.g_raw, cs)
+        admm_topo = _finalize(n, sel, cfg, f"ba-topo(n={n},r={r})", cs, {**meta,
+                              "admm_iters": res.iters, "admm_residual": res.residual,
+                              "lam_tilde": res.lam_tilde})
+
+        for cand in (admm_topo, warm_topo):
+            if not cand.meta.get("connected", False):
+                continue
+            if best_topo is None or cand.r_asym() < best_topo.r_asym():
+                src = "admm" if cand is admm_topo else "warm-start"
+                cand.meta["selected_from"] = src
+                best_topo = cand
+
+    # classic-topology candidates: the ADMM is non-convex, and on small
+    # tightly-budgeted instances a known-good structure (ring / torus) that
+    # happens to be feasible can beat a weak local optimum. Polish their
+    # weights with the same convex step so the comparison is fair.
+    from .topologies import make_baseline
+    classic: list = []
+    for kind in ("ring", "torus", "hypercube"):
+        try:
+            classic.append(make_baseline(kind, n))
+        except Exception:
+            continue
+    eidx = edge_index(n)
+    for base in classic:
+        if len(base.edges) > r or base.meta.get("directed"):
+            continue
+        sel = np.zeros(len(all_edges(n)), dtype=bool)
+        for e in base.edges:
+            sel[eidx[tuple(sorted(e))]] = True
+        if cs is not None and not cs.feasible(sel):
+            continue
+        cand = _finalize(n, sel, cfg, f"ba-topo(n={n},r={r},{base.name})", cs,
+                         dict(meta))
+        if cand.meta.get("connected") and (
+                best_topo is None or cand.r_asym() < best_topo.r_asym()):
+            cand.meta["selected_from"] = f"classic:{base.name}"
+            best_topo = cand
+
+    assert best_topo is not None, "failed to construct any connected topology"
+    best_topo.meta["r_asym"] = best_topo.r_asym()
+    return best_topo
+
+
+def _greedy_constraint_graph(n: int, r: int, cs: ConstraintSet, rng) -> list[tuple[int, int]]:
+    """Random feasible connected graph with ≤ r edges under ``cs`` capacities."""
+    edges_full = all_edges(n)
+    m = len(edges_full)
+    order = [l for l in range(m) if cs.edge_ok[l]]
+    for _ in range(256):
+        rng.shuffle(order)
+        usage = np.zeros(cs.q, dtype=np.int64)
+        sel = np.zeros(m, dtype=bool)
+        count = 0
+        # first pass: spanning-tree bias for connectivity
+        comp = list(range(n))
+
+        def find(a):
+            while comp[a] != a:
+                comp[a] = comp[comp[a]]
+                a = comp[a]
+            return a
+
+        for phase in (0, 1):
+            for l in order:
+                if count >= r:
+                    break
+                if sel[l]:
+                    continue
+                i, j = edges_full[l]
+                if phase == 0 and find(i) == find(j):
+                    continue
+                col = cs.M[:, l]
+                if np.any(usage + col > cs.e_cap):
+                    continue
+                sel[l] = True
+                usage += col
+                count += 1
+                comp[find(i)] = find(j)
+        edges = [edges_full[l] for l in np.nonzero(sel)[0]]
+        if is_connected(n, edges):
+            return edges
+    raise RuntimeError("could not build a feasible connected warm start")

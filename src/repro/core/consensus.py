@@ -1,0 +1,65 @@
+"""Consensus-speed evaluation (§VI-A).
+
+Simulates x_{k+1} = W x_k from standard-Gaussian initial values and tracks the
+consensus error ‖x_k − x̄‖₂ per iteration, then converts iterations to wall
+clock with the bandwidth model (Eq. 34). Implemented in JAX (scan) so the same
+code path is exercised by tests and benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bandwidth import PaperConstants, t_iter
+from .graph import Topology
+
+__all__ = ["ConsensusTrace", "simulate_consensus", "time_to_error"]
+
+
+@dataclass
+class ConsensusTrace:
+    errors: np.ndarray        # (iters+1,) consensus error per iteration
+    t_iter_ms: float          # wall-clock per iteration (Eq. 34)
+    times_ms: np.ndarray      # (iters+1,)
+    topology: str
+
+
+def simulate_consensus(
+    topo: Topology,
+    iters: int = 200,
+    dim: int = 16,
+    seed: int = 0,
+    b_min: float | None = None,
+    const: PaperConstants = PaperConstants(),
+) -> ConsensusTrace:
+    W = jnp.asarray(topo.W, dtype=jnp.float64)
+    n = topo.n
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.normal(key, (n, dim), dtype=jnp.float64)
+
+    def step(x, _):
+        xn = W @ x
+        xbar = jnp.mean(xn, axis=0, keepdims=True)
+        err = jnp.linalg.norm(xn - xbar)
+        return xn, err
+
+    xbar0 = jnp.mean(x0, axis=0, keepdims=True)
+    e0 = jnp.linalg.norm(x0 - xbar0)
+    _, errs = jax.lax.scan(step, x0, None, length=iters)
+    errors = np.concatenate([[float(e0)], np.asarray(errs)])
+    ti = t_iter(b_min, const) if b_min is not None else float("nan")
+    times = np.arange(iters + 1) * (ti if np.isfinite(ti) else 1.0)
+    return ConsensusTrace(errors=errors, t_iter_ms=ti, times_ms=times, topology=topo.name)
+
+
+def time_to_error(trace: ConsensusTrace, target: float = 1e-4) -> float:
+    """First wall-clock time (ms) at which the consensus error ≤ target
+    (relative to the initial error). inf if never reached."""
+    rel = trace.errors / max(trace.errors[0], 1e-300)
+    hit = np.nonzero(rel <= target)[0]
+    if hit.size == 0:
+        return float("inf")
+    return float(trace.times_ms[hit[0]])

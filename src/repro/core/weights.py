@@ -1,0 +1,118 @@
+"""Edge-weight assignment schemes for a *fixed* graph support.
+
+- ``metropolis_weights``: the degree-based convention [17] the paper uses for
+  intuition-designed baselines.
+- ``uniform_neighbor_weights``: W_ij = 1/(d_max+1)-style uniform mixing.
+- ``best_constant_weights``: Xiao–Boyd best constant edge weight
+  α* = 2/(λ₁(L₁)+λ_{n−1}(L₁)) for unweighted Laplacian L₁ [22].
+- ``polish_weights``: projected-subgradient minimization of the *convex*
+  objective max(λ_max(L)−1, 1−λ₂(L)) over g ≥ 0 for fixed support — recovers
+  the Xiao–Boyd SDP optimum without an SDP solver (beyond-paper; used both to
+  polish ADMM output and to give baselines their optimal weights when we want
+  a harder comparison).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import degrees, laplacian_from_weights
+
+__all__ = [
+    "metropolis_weights",
+    "uniform_neighbor_weights",
+    "best_constant_weights",
+    "polish_weights",
+    "asym_factor_from_g",
+]
+
+
+def metropolis_weights(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    d = degrees(n, edges)
+    return np.array([1.0 / (1.0 + max(d[i], d[j])) for i, j in edges])
+
+
+def uniform_neighbor_weights(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    d = degrees(n, edges)
+    dmax = int(d.max()) if len(edges) else 0
+    return np.full(len(edges), 1.0 / (dmax + 1.0))
+
+
+def _unweighted_laplacian_eigs(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    L1 = laplacian_from_weights(n, edges, np.ones(len(edges)))
+    return np.linalg.eigvalsh(L1)
+
+
+def best_constant_weights(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    ev = _unweighted_laplacian_eigs(n, edges)
+    lam_max, lam_2 = ev[-1], ev[1]
+    alpha = 2.0 / (lam_max + lam_2)
+    return np.full(len(edges), alpha)
+
+
+def asym_factor_from_g(n: int, edges: list[tuple[int, int]], g: np.ndarray) -> float:
+    """max(λ_max(L)−1, 1−λ₂(L)) — equals r_asym(I−L) when both λ bounds hold."""
+    L = laplacian_from_weights(n, edges, g)
+    ev = np.linalg.eigvalsh(L)
+    return float(max(ev[-1] - 1.0, 1.0 - ev[1]))
+
+
+def polish_weights(
+    n: int,
+    edges: list[tuple[int, int]],
+    g0: np.ndarray | None = None,
+    iters: int = 400,
+    enforce_diag: bool = True,
+    seed: int = 0,
+) -> np.ndarray:
+    """Projected subgradient descent on f(g) = max(λ_max(L(g))−1, 1−λ₂(L(g))).
+
+    f is convex in g (max of a convex max-eigenvalue term and a concave-negated
+    second-smallest-eigenvalue term). Subgradients come from eigenvector outer
+    products: ∂λ(L)/∂g_l = (u_i − u_j)² for edge l = {i, j} and eigvec u.
+    Projection: g ≥ 0, optionally diag(L) ≤ 1 (scale down if violated) so the
+    resulting W = I − L stays entrywise-nonnegative, matching Eq. (9).
+    """
+    m = len(edges)
+    if m == 0:
+        return np.zeros(0)
+    if g0 is None:
+        g0 = best_constant_weights(n, edges)
+    g = np.asarray(g0, dtype=np.float64).copy()
+    ei = np.array([i for i, _ in edges])
+    ej = np.array([j for _, j in edges])
+
+    def project(g: np.ndarray) -> np.ndarray:
+        g = np.maximum(g, 0.0)
+        if enforce_diag:
+            # diag(L)_i = sum of incident weights; scale all down if any exceeds 1
+            diag = np.zeros(n)
+            np.add.at(diag, ei, g)
+            np.add.at(diag, ej, g)
+            mx = diag.max() if n else 0.0
+            if mx > 1.0:
+                g = g / mx
+        return g
+
+    g = project(g)
+    best_g, best_f = g.copy(), asym_factor_from_g(n, edges, g)
+    step0 = 0.05
+    for t in range(iters):
+        L = laplacian_from_weights(n, edges, g)
+        evals, evecs = np.linalg.eigh(L)
+        f_max = evals[-1] - 1.0
+        f_gap = 1.0 - evals[1]
+        if f_max >= f_gap:
+            u = evecs[:, -1]
+            sub = (u[ei] - u[ej]) ** 2  # ∂(λ_max − 1)
+        else:
+            u = evecs[:, 1]
+            sub = -((u[ei] - u[ej]) ** 2)  # ∂(1 − λ₂)
+        f = max(f_max, f_gap)
+        if f < best_f:
+            best_f, best_g = f, g.copy()
+        step = step0 / np.sqrt(1.0 + t)
+        nrm = np.linalg.norm(sub)
+        if nrm < 1e-14:
+            break
+        g = project(g - step * sub / nrm)
+    return best_g

@@ -1,0 +1,14 @@
+"""Synthetic data pipelines (offline container — no dataset downloads)."""
+from .pipeline import (
+    DataConfig,
+    class_balanced_partition,
+    make_classification_data,
+    synthetic_batches,
+    synthetic_lm_batch,
+    token_pipeline,
+)
+
+__all__ = [
+    "DataConfig", "class_balanced_partition", "make_classification_data",
+    "synthetic_batches", "synthetic_lm_batch", "token_pipeline",
+]

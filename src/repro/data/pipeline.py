@@ -1,0 +1,123 @@
+"""Deterministic synthetic data substrate.
+
+Two pipelines:
+
+1. ``token_pipeline`` — language-model batches {tokens, labels} with a
+   *learnable* structure (a hidden bigram Markov chain) so training loss
+   demonstrably decreases; used by the end-to-end DSGD example and the
+   per-arch smoke tests. VLM/audio archs additionally get stub ``embeds``
+   (the brief's frontend carve-out).
+
+2. ``make_classification_data`` + ``class_balanced_partition`` — mirrors the
+   paper's §VI-B protocol: "each node randomly samples the same number of
+   samples from each class" (IID class-balanced CIFAR-like partition), on a
+   synthetic Gaussian-mixture task so the decentralized-vs-topology
+   comparisons of Table II can run offline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DataConfig", "token_pipeline", "synthetic_lm_batch", "synthetic_batches",
+           "make_classification_data", "class_balanced_partition"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int           # per-node batch
+    frontend_tokens: int = 0  # > 0 → provide stub embeds (vlm/audio)
+    d_model: int = 0          # embed dim for stub embeds
+    seed: int = 0
+
+
+def _bigram_table(vocab: int, seed: int) -> np.ndarray:
+    """Row-stochastic bigram transition table with low entropy (learnable)."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(vocab, vocab)) * 2.0
+    # sparsify: each token strongly predicts ~4 successors
+    top = np.argpartition(-logits, 4, axis=1)[:, :4]
+    mask = np.full_like(logits, -1e9)
+    np.put_along_axis(mask, top, 0.0, axis=1)
+    p = np.exp(logits + mask)
+    return p / p.sum(axis=1, keepdims=True)
+
+
+def synthetic_lm_batch(cfg: DataConfig, step: int, node: int = 0) -> dict:
+    """One {tokens, labels(, embeds)} batch. Pure function of (cfg, step, node)
+    so every DSGD worker regenerates its own shard without host state."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, node, step]))
+    table = _bigram_table(cfg.vocab_size, cfg.seed)
+    B, S = cfg.batch_size, cfg.seq_len
+    toks = np.empty((B, S), dtype=np.int32)
+    toks[:, 0] = rng.integers(0, cfg.vocab_size, size=B)
+    u = rng.random((B, S))
+    cdf = np.cumsum(table, axis=1)
+    for t in range(1, S):
+        toks[:, t] = np.argmax(cdf[toks[:, t - 1]] > u[:, t, None], axis=1)
+    batch = {
+        "tokens": jnp.asarray(toks),
+        "labels": jnp.asarray(np.concatenate(
+            [toks[:, 1:], np.full((B, 1), -100, np.int32)], axis=1)),
+    }
+    if cfg.frontend_tokens:
+        emb = rng.normal(size=(B, cfg.frontend_tokens, cfg.d_model)).astype(np.float32)
+        batch["embeds"] = jnp.asarray(emb)
+    return batch
+
+
+def token_pipeline(cfg: DataConfig, node: int = 0):
+    """Infinite iterator of LM batches for one worker."""
+    step = 0
+    while True:
+        yield synthetic_lm_batch(cfg, step, node)
+        step += 1
+
+
+def synthetic_batches(cfg: DataConfig, steps: int, node: int = 0) -> list[dict]:
+    return [synthetic_lm_batch(cfg, s, node) for s in range(steps)]
+
+
+# ---------------------------------------------------------------------------
+# classification substrate for the DSGD topology experiments (paper §VI-B)
+# ---------------------------------------------------------------------------
+
+def make_classification_data(num_classes: int = 10, dim: int = 64,
+                             samples_per_class: int = 512, seed: int = 0,
+                             class_sep: float = 3.0, noise_seed: int | None = None):
+    """Gaussian-mixture classification set (CIFAR-10 stand-in, offline).
+
+    ``seed`` fixes the class means (the task); ``noise_seed`` draws the
+    samples — pass a different noise_seed for a held-out test split of the
+    SAME task. Returns (X (N, dim) f32, y (N,) i32)."""
+    rng = np.random.default_rng(seed)
+    means = rng.normal(size=(num_classes, dim)) * class_sep / np.sqrt(dim)
+    rng = np.random.default_rng(seed if noise_seed is None else noise_seed)
+    X, y = [], []
+    for c in range(num_classes):
+        X.append(means[c] + rng.normal(size=(samples_per_class, dim)))
+        y.append(np.full(samples_per_class, c, np.int32))
+    X = np.concatenate(X).astype(np.float32)
+    y = np.concatenate(y)
+    perm = rng.permutation(len(y))
+    return X[perm], y[perm]
+
+
+def class_balanced_partition(y: np.ndarray, n_nodes: int, seed: int = 0) -> list[np.ndarray]:
+    """Paper §VI-B: each node samples the same number of samples per class."""
+    rng = np.random.default_rng(seed)
+    parts: list[list[int]] = [[] for _ in range(n_nodes)]
+    for c in np.unique(y):
+        idx = np.nonzero(y == c)[0]
+        rng.shuffle(idx)
+        take = (len(idx) // n_nodes) * n_nodes
+        for k, chunk in enumerate(np.split(idx[:take], n_nodes)):
+            parts[k].extend(chunk.tolist())
+    return [np.asarray(sorted(p), dtype=np.int64) for p in parts]

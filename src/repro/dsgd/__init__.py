@@ -1,0 +1,32 @@
+"""Decentralized-SGD runtime: BA-Topo gossip as a TPU collective schedule."""
+from .schedule import GossipSchedule, bytes_per_sync, reconstruct_weight_matrix, schedule_from_topology
+from .compression import (
+    ChocoState,
+    choco_gamma,
+    choco_gossip_init,
+    choco_gossip_step,
+    identity_compressor,
+    random_k_compressor,
+    top_k_compressor,
+)
+from .dynamic import cycle_contraction, round_robin_schedules
+from .gossip import gossip_shard, gossip_sim, gossip_sim_tree
+from .trainer import (
+    DSGDState,
+    allreduce_train_step,
+    dsgd_train_step,
+    init_dsgd_state,
+    make_matmul_gossip_train_step,
+    make_sharded_train_step,
+    make_tp_train_step,
+)
+
+__all__ = [
+    "GossipSchedule", "bytes_per_sync", "reconstruct_weight_matrix",
+    "schedule_from_topology", "gossip_shard", "gossip_sim", "gossip_sim_tree",
+    "ChocoState", "choco_gamma", "choco_gossip_init", "choco_gossip_step",
+    "identity_compressor", "random_k_compressor", "top_k_compressor",
+    "cycle_contraction", "round_robin_schedules",
+    "DSGDState", "allreduce_train_step", "dsgd_train_step", "init_dsgd_state",
+    "make_matmul_gossip_train_step", "make_sharded_train_step", "make_tp_train_step",
+]

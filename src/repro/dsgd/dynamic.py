@@ -1,0 +1,88 @@
+"""Time-varying gossip (beyond paper — its §VII names dynamic topologies as
+future work).
+
+Instead of applying the full weight matrix every step (deg(i) sends per
+node), the static BA-Topo is decomposed into its matching rounds and ONE
+round is applied per optimizer step, cycling round-robin:
+
+    x_{t+1} = W_{t mod R} x_t,   W_c = I − Σ_{(i,j)∈M_c} g_ij (e_i−e_j)(e_i−e_j)ᵀ
+
+Each W_c is symmetric doubly stochastic (a matching step), so the cycle
+product Π W_c is doubly stochastic with spectral contraction measured by
+``cycle_contraction``. Per-step communication drops to ≤1 send/node (the
+per-edge bandwidth under the paper's sharing model rises to the FULL node
+bandwidth — b_unit = b_i instead of b_i/deg), trading per-step consensus
+for much cheaper steps: the net effect on the paper's t_iter model is
+evaluated in benchmarks/bench_dynamic.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core.graph import Topology, weight_matrix_from_weights
+
+from .gossip import gossip_shard
+from .schedule import GossipSchedule, _edge_color
+
+__all__ = ["round_robin_schedules", "cycle_weight_matrices", "cycle_contraction",
+           "gossip_shard_dynamic"]
+
+
+def round_robin_schedules(topo: Topology) -> list[GossipSchedule]:
+    """One single-round GossipSchedule per matching of the topology.
+
+    Edge weights are re-balanced for single-matching application: within a
+    matching, the pairwise-averaging-with-weight step uses
+    w_ij' = min(2·g_ij, 0.5) (a lazy pairwise average), which keeps each W_c
+    doubly stochastic and PSD-contractive regardless of the static weights.
+    """
+    n = topo.n
+    eidx = {tuple(sorted(e)): k for k, e in enumerate(topo.edges)}
+    matchings = _edge_color(n, list(topo.edges))
+    schedules = []
+    for c, matching in enumerate(matchings):
+        pairs: list[tuple[int, int]] = []
+        recv = np.zeros(n)
+        selfw = np.ones(n)
+        for i, j in matching:
+            w = min(2.0 * float(topo.g[eidx[tuple(sorted((i, j)))]]), 0.5)
+            pairs.extend([(i, j), (j, i)])
+            recv[i] = w
+            recv[j] = w
+            selfw[i] = 1.0 - w
+            selfw[j] = 1.0 - w
+        schedules.append(GossipSchedule(
+            n=n, perms=(tuple(sorted(pairs)),),
+            recv_weights=(tuple(recv),),
+            self_weights=tuple(selfw),
+            name=f"{topo.name}/round{c}"))
+    return schedules
+
+
+def cycle_weight_matrices(schedules: list[GossipSchedule]) -> list[np.ndarray]:
+    from .schedule import reconstruct_weight_matrix
+    return [reconstruct_weight_matrix(s) for s in schedules]
+
+
+def cycle_contraction(schedules: list[GossipSchedule]) -> float:
+    """ρ(Π W_c − 11ᵀ/n): per-cycle consensus contraction of the round-robin
+    scheme (compare against r_asym(W_static)^1 per full static sync)."""
+    Ws = cycle_weight_matrices(schedules)
+    n = Ws[0].shape[0]
+    prod = np.eye(n)
+    for W in Ws:
+        prod = W @ prod
+    dev = prod - np.ones((n, n)) / n
+    return float(np.max(np.abs(np.linalg.eigvals(dev))))
+
+
+def gossip_shard_dynamic(tree, schedules: list[GossipSchedule], step, axis):
+    """Apply round ``step % R`` inside shard_map. ``step`` is a traced scalar;
+    rounds are selected with lax.switch over the (static) schedule list."""
+    branches = [
+        (lambda s: (lambda t: gossip_shard(t, s, axis)))(s) for s in schedules
+    ]
+    idx = step % len(schedules)
+    return jax.lax.switch(idx, branches, tree)

@@ -1,0 +1,234 @@
+"""DSGD training steps (Lian et al. 2017, adapt-then-combine):
+
+    x_i ← Σ_j W_ij · ( x_j − lr · ∇f_j(x_j) )
+
+Three step builders share the same math:
+
+  dsgd_train_step          single-device oracle: workers stacked on a leading
+                           (n,) axis, vmapped grads, gossip = dense W matmul
+                           (paper Eq. 1 verbatim).
+  allreduce_train_step     centralized baseline (W = 11ᵀ/n ⇒ exact averaging);
+                           same stacked layout so time-to-accuracy comparisons
+                           are apples-to-apples.
+  make_sharded_train_step  production path: jit(shard_map) manual over the
+                           gossip axis ("data", or ("pod","data") multi-pod),
+                           auto over "model"; gossip = ppermute matching
+                           rounds from schedule.py. This is what the multi-pod
+                           dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.graph import Topology, weight_matrix_from_weights
+from repro.models import transformer
+from repro.optim import apply_updates
+
+from .gossip import gossip_shard, gossip_sim_tree
+from .schedule import GossipSchedule, schedule_from_topology
+
+__all__ = ["DSGDState", "init_dsgd_state", "dsgd_train_step", "allreduce_train_step",
+           "make_sharded_train_step"]
+
+
+class DSGDState(NamedTuple):
+    """Per-worker replicas stacked on a leading (n,) axis (sharded over the
+    gossip mesh axis in the production path, a plain array axis in the sim)."""
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def init_dsgd_state(key, cfg, n_workers: int, opt_init: Callable) -> DSGDState:
+    """All workers start from identical params (standard DSGD init: the
+    consensus error starts at 0 and is re-introduced only by gradient noise)."""
+    params = transformer.init_params(key, cfg)
+    opt = opt_init(params)
+    rep = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape), t)
+    return DSGDState(rep(params), rep(opt), jnp.zeros((), jnp.int32))
+
+
+def _loss_fn(cfg, aux_weight: float = 0.01):
+    def fn(params, batch):
+        return transformer.train_loss(params, cfg, batch, aux_weight=aux_weight)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# single-device oracle paths
+# ---------------------------------------------------------------------------
+
+def dsgd_train_step(cfg, topo: Topology, opt_update: Callable, *,
+                    use_kernel: bool = False):
+    """Returns jit'd (state, batch) → (state, metrics); batch leaves (n, b, ...)."""
+    W = jnp.asarray(weight_matrix_from_weights(topo.n, topo.edges, topo.g),
+                    jnp.float32)
+    loss_fn = _loss_fn(cfg)
+
+    @jax.jit
+    def step(state: DSGDState, batch):
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(state.params, batch)
+        updates, opt = jax.vmap(opt_update)(grads, state.opt, state.params)
+        params = jax.vmap(apply_updates)(state.params, updates)
+        params = gossip_sim_tree(params, W, use_kernel=use_kernel)
+        metrics = {"loss": losses.mean(), "loss_max": losses.max(),
+                   "consensus_err": _consensus_error(params)}
+        return DSGDState(params, opt, state.step + 1), metrics
+
+    return step
+
+
+def allreduce_train_step(cfg, n_workers: int, opt_update: Callable):
+    """Centralized all-reduce baseline: exact parameter averaging each step."""
+    W = jnp.full((n_workers, n_workers), 1.0 / n_workers, jnp.float32)
+    loss_fn = _loss_fn(cfg)
+
+    @jax.jit
+    def step(state: DSGDState, batch):
+        losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(state.params, batch)
+        updates, opt = jax.vmap(opt_update)(grads, state.opt, state.params)
+        params = jax.vmap(apply_updates)(state.params, updates)
+        params = gossip_sim_tree(params, W)
+        metrics = {"loss": losses.mean(), "loss_max": losses.max(),
+                   "consensus_err": _consensus_error(params)}
+        return DSGDState(params, opt, state.step + 1), metrics
+
+    return step
+
+
+def _consensus_error(params) -> jnp.ndarray:
+    """‖x − x̄‖_F over all stacked leaves (the paper's consensus metric)."""
+    def leaf_err(x):
+        mean = x.mean(axis=0, keepdims=True)
+        return jnp.sum(jnp.square((x - mean).astype(jnp.float32)))
+    return jnp.sqrt(sum(jax.tree.leaves(jax.tree.map(leaf_err, params))))
+
+
+def _accum_value_and_grad(loss_fn, params, batch, accum_steps: int):
+    """Gradient accumulation: scan over ``accum_steps`` microbatches (split on
+    the batch dim) — peak activation memory shrinks ×accum_steps while the
+    gradient is mathematically identical (mean of microbatch grads)."""
+    if accum_steps <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    gfn = jax.value_and_grad(loss_fn)
+
+    def body(carry, mb):
+        loss_acc, grad_acc = carry
+        loss, grads = gfn(params, mb)
+        return (loss_acc + loss,
+                jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                             grad_acc, grads)), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grad_sum), _ = jax.lax.scan(body, (jnp.float32(0), zeros), micro)
+    scale = 1.0 / accum_steps
+    return loss_sum * scale, jax.tree.map(lambda g: g * scale, grad_sum)
+
+
+def make_matmul_gossip_train_step(cfg, topo: Topology, opt_update: Callable, *,
+                                  accum_steps: int = 1):
+    """Stacked-worker DSGD step with gossip as the dense W matmul (Eq. 1)
+    under pure pjit — no manual mesh axes. Used for pod-sized workers
+    (n = #pods is tiny, so the (n×n)·params einsum is cheap), where XLA's
+    partial-manual partitioner chokes on the MoE gathers at 512 devices.
+    XLA lowers the worker-axis contraction to pod-boundary collectives."""
+    W = jnp.asarray(weight_matrix_from_weights(topo.n, topo.edges, topo.g),
+                    jnp.float32)
+    loss_fn = _loss_fn(cfg)
+    from .gossip import gossip_sim_tree
+
+    def train_step(state: DSGDState, batch):
+        losses, grads = jax.vmap(
+            lambda p, b: _accum_value_and_grad(loss_fn, p, b, accum_steps)
+        )(state.params, batch)
+        updates, opt = jax.vmap(opt_update)(grads, state.opt, state.params)
+        params = jax.vmap(apply_updates)(state.params, updates)
+        params = gossip_sim_tree(params, W)
+        return DSGDState(params, opt, state.step + 1), {"loss": losses.mean()}
+
+    return train_step
+
+
+def make_tp_train_step(cfg, opt_update: Callable, *, accum_steps: int = 1):
+    """Single-worker step (no gossip): pure tensor/2-D-parallel training via
+    pjit sharding constraints — the big-arch (mixtral) single-pod fallback."""
+    loss_fn = _loss_fn(cfg)
+
+    def train_step(state: DSGDState, batch):
+        loss, grads = _accum_value_and_grad(loss_fn, state.params, batch,
+                                            accum_steps)
+        updates, opt = opt_update(grads, state.opt, state.params)
+        params = apply_updates(state.params, updates)
+        return DSGDState(params, opt, state.step + 1), {"loss": loss}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# production sharded path (dry-run target)
+# ---------------------------------------------------------------------------
+
+def make_sharded_train_step(cfg, sched: GossipSchedule, opt_update: Callable,
+                            mesh, *, gossip_axes=("data",), sync: str = "gossip"):
+    """Build the pjit-able DSGD step for a mesh.
+
+    gossip_axes: mesh axis name(s) hosting the n workers — ("data",) single
+    pod, ("pod", "data") multi-pod (ppermute treats the tuple as one
+    flattened logical axis; BA-Topo's pod_boundary_constraints penalize
+    edges crossing the slow boundary).
+    sync ∈ {"gossip", "allreduce", "none"}: allreduce is the centralized
+    baseline lowered on the same mesh; none isolates compute for roofline.
+    """
+    axis = gossip_axes if len(gossip_axes) > 1 else gossip_axes[0]
+    loss_fn = _loss_fn(cfg)
+
+    def worker(params, opt, batch, step):
+        # leaves arrive with leading worker axis of size 1 (manual shard)
+        sq = lambda t: jax.tree.map(lambda x: x[0], t)
+        un = lambda t: jax.tree.map(lambda x: x[None], t)
+        p1, o1 = sq(params), sq(opt)
+        b1 = sq(batch)
+        loss, grads = jax.value_and_grad(loss_fn)(p1, b1)
+        updates, o1 = opt_update(grads, o1, p1)
+        p1 = apply_updates(p1, updates)
+        if sync == "gossip":
+            p1 = gossip_shard(p1, sched, axis)
+        elif sync == "allreduce":
+            # pmean in f32: XLA CPU's float-normalization pass crashes
+            # cloning a bf16 all-reduce (ChangeOpDataType/CloneAllReduce)
+            p1 = jax.tree.map(
+                lambda x: jax.lax.pmean(x.astype(jnp.float32), axis).astype(x.dtype),
+                p1)
+        loss = jax.lax.pmean(loss, axis)
+        return un(p1), un(o1), loss
+
+    nspec = P(gossip_axes if len(gossip_axes) > 1 else gossip_axes[0])
+    smapped = jax.shard_map(
+        worker, mesh=mesh,
+        in_specs=(nspec, nspec, nspec, P()),
+        out_specs=(nspec, nspec, P()),
+        axis_names=set(gossip_axes),
+        # model code is mesh-agnostic: its scan carries start axis-invariant
+        # and become varying, which the static VMA checker rejects
+        check_vma=False,
+    )
+
+    def train_step(state: DSGDState, batch):
+        params, opt, loss = smapped(state.params, state.opt, batch, state.step)
+        return DSGDState(params, opt, state.step + 1), {"loss": loss}
+
+    return train_step

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v, valid, *, attn_softcap: float = 0.0):
+    """q: (B, Hq, hd); k/v: (B, C, Hkv, hd); valid: (C,). Returns (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, kf) / jnp.sqrt(hd).astype(jnp.float32)
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgc,bchd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

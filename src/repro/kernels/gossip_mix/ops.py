@@ -1,0 +1,48 @@
+"""jit'd public wrapper: flatten arbitrary parameter shapes to the kernel's
+(R, 1024) tiling, pad the tail, dispatch, restore shape."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import LANE, SUBLANE, gossip_mix_2d
+
+_TILE = LANE * SUBLANE
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def gossip_mix(x, nbrs, weights, *, use_kernel: bool = True, interpret: bool = True):
+    """Mix one worker's parameter tensor with its neighbors' copies.
+
+    x: (...,) any shape; nbrs: (deg, ...) stacked neighbor copies;
+    weights: (deg+1,) with w[0] the self weight (a BA-Topo W row).
+    """
+    if not use_kernel:
+        return ref.gossip_mix(x, nbrs, weights)
+    shape = x.shape
+    deg = nbrs.shape[0]
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _TILE
+    flat = jnp.pad(flat, (0, pad))
+    nflat = jnp.pad(nbrs.reshape(deg, -1), ((0, 0), (0, pad)))
+    R = flat.shape[0] // LANE
+    out = gossip_mix_2d(flat.reshape(R, LANE), nflat.reshape(deg, R, LANE),
+                        weights, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def gossip_mix_tree(params, nbr_params, weights, *, use_kernel: bool = True,
+                    interpret: bool = True):
+    """Apply gossip_mix leaf-wise over a parameter pytree.
+
+    params: pytree of arrays; nbr_params: same pytree with a leading (deg,)
+    axis on every leaf; weights: (deg+1,).
+    """
+    return jax.tree.map(
+        lambda x, nb: gossip_mix(x, nb, weights, use_kernel=use_kernel,
+                                 interpret=interpret),
+        params, nbr_params)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the gossip mixing kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gossip_mix(x, nbrs, weights):
+    """x: any shape; nbrs: (deg,) + x.shape; weights: (deg+1,), w[0] = self.
+
+    Returns w[0]·x + Σ_d w[d+1]·nbrs[d], accumulated in f32.
+    """
+    w = weights.astype(jnp.float32)
+    acc = x.astype(jnp.float32) * w[0]
+    acc = acc + jnp.tensordot(w[1:], nbrs.astype(jnp.float32), axes=(0, 0))
+    return acc.astype(x.dtype)

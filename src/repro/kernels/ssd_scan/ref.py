@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the SSD intra-chunk dual form (mirrors ssm.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk(xc, dtc, la, Bc, Cc):
+    """xc: (B,nc,Q,H,P); dtc/la: (B,nc,Q,H); Bc/Cc: (B,nc,Q,N).
+
+    Returns (y_intra (B,nc,Q,H,P), chunk_states (B,nc,H,P,N)), both f32."""
+    Q = xc.shape[2]
+    xf = xc.astype(jnp.float32)
+    dtf = dtc.astype(jnp.float32)
+    laf = la.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    Ldec = jnp.exp(laf[:, :, :, None, :] - laf[:, :, None, :, :])   # (B,nc,Qt,Qs,H)
+    causal = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    Ldec = jnp.where(causal[None, None, :, :, None], Ldec, 0.0)
+    CB = jnp.einsum("bctn,bcsn->bcts", Cf, Bf)
+    y_intra = jnp.einsum("bcts,bctsh,bcsh,bcshp->bcthp", CB, Ldec, dtf, xf)
+    decay_out = jnp.exp(laf[:, :, -1:, :] - laf)                    # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchpn",
+                              decay_out, dtf, Bf, xf)
+    return y_intra, chunk_states

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, distribution plans, dry-run, CLI drivers."""

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Factory functions (NOT module-level constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax init.
+
+Target hardware: TPU v5e, 256 chips/pod (16×16 ICI torus), 2 pods via DCI.
+  single-pod  (16, 16)        axes ("data", "model")
+  multi-pod   (2, 16, 16)     axes ("pod", "data", "model")
+
+The "data" axis hosts the decentralized gossip workers (paper's compute
+nodes); "model" is intra-worker tensor parallelism; "pod" crosses the slow
+DCI boundary — the BA-Topo heterogeneous machinery treats it exactly like
+the paper's inter-server switch tier (core.constraints.pod_boundary_constraints).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "POD_SHAPE", "MULTIPOD_SHAPE"]
+
+POD_SHAPE = (16, 16)
+MULTIPOD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    ndev = len(jax.devices())
+    assert data * model <= ndev, (data, model, ndev)
+    return jax.make_mesh((data, model), ("data", "model"))

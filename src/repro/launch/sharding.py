@@ -1,0 +1,277 @@
+"""Distribution plans + PartitionSpec assignment for every (arch × shape × mesh).
+
+Worker granularity (the decentralized-learning unit the paper calls a "node")
+is chosen per architecture from its memory footprint:
+
+  standard     worker = one "data"-axis slice (16 chips of "model" TP);
+               16 gossip workers/pod, 32 multi-pod — the paper's n=16/32.
+  pod_worker   replica + optimizer state would blow a 16-chip slice's HBM
+               (mixtral-8x22b: ~846 GB/replica) → worker = a whole pod with
+               2-D ("data","model") tensor sharding; gossip runs over the
+               "pod" axis only (n=2) exactly like the paper's inter-server
+               tier. Single-pod train then has ONE worker (pure TP, no
+               gossip) — recorded in DESIGN.md §Hardware-adaptation.
+
+Inference shapes never replicate per worker: params shard 2-D over the whole
+mesh (FSDP-style), batch/caches over the batch axes.
+
+Spec assignment is rule-based on the pytree key path + dim sizes. Shardings
+never change numerics — only layout — so the rules are heuristics with a
+replicate fallback; GSPMD pads non-divisible dims.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig
+
+__all__ = ["DistPlan", "plan_for", "param_specs", "tree_param_specs", "batch_specs",
+           "cache_specs", "with_sharding", "params_bytes", "REPLICA_BUDGET_BYTES",
+           "axis_sizes"]
+
+# one worker slice = 16 chips × 16 GB HBM; keep replica+opt under ~60%
+REPLICA_BUDGET_BYTES = int(16 * 16e9 * 0.6)
+
+
+@dataclass(frozen=True)
+class DistPlan:
+    gossip_axes: tuple[str, ...]   # mesh axes hosting gossip workers ((), = no DP)
+    tensor_axes: tuple[str, ...]   # intra-worker model-sharding axes
+    batch_axes: tuple[str, ...]    # inference batch axes
+    n_workers: int
+    # expert parallelism: mesh axis owning the MoE expert dim (weights stay
+    # resident; tokens all-to-all to their experts). GSPMD pads E up to the
+    # axis size when uneven (mixtral: 8 experts on a 16-axis).
+    expert_axis: str | None = None
+
+    @property
+    def gossip_spec_axis(self):
+        if not self.gossip_axes:
+            return None
+        return self.gossip_axes if len(self.gossip_axes) > 1 else self.gossip_axes[0]
+
+
+def axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def params_bytes(cfg: ModelConfig) -> int:
+    """Replica size in its native dtype, via eval_shape (no allocation)."""
+    from repro.models import transformer
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(shapes))
+
+
+def plan_for(cfg: ModelConfig, mesh, *, mode: str,
+             tp_only: bool | None = None,
+             expert_parallel: bool = False) -> DistPlan:
+    """mode ∈ {"train", "prefill", "decode"}. Mesh axes: ("pod",)? + "data"
+    + "model"; any mesh without a "pod" axis is treated as single-pod.
+
+    tp_only (inference): shard weights over "model" ONLY, keeping them
+    resident (no per-layer FSDP all-gathers); "data" carries just the batch.
+    None = auto: TP-only whenever the model fits one "model" slice
+    (pb/model_size ≤ ~60% of HBM per chip), 2-D FSDP×TP otherwise (mixtral).
+    """
+    sizes = axis_sizes(mesh)
+    multi_pod = "pod" in sizes and sizes["pod"] > 1
+    pb = params_bytes(cfg)
+    # per-worker footprint: replica (native dtype) + f32 momentum + f32 grads
+    n_params = pb // (2 if cfg.dtype == "bfloat16" else 4)
+    train_worker_bytes = pb + 2 * 4 * n_params
+    slice_budget = sizes.get("model", 1) * 16e9 * 0.6
+    if mode == "train":
+        if train_worker_bytes > slice_budget:
+            # pod-sized worker: params 2-D sharded; the worker's batch shards
+            # over "data" too (activation sharding — the global batch would
+            # otherwise replicate 1M-token activations on every chip)
+            return DistPlan(
+                gossip_axes=("pod",) if multi_pod else (),
+                tensor_axes=("data", "model"), batch_axes=("data",),
+                n_workers=sizes.get("pod", 1) if multi_pod else 1,
+                expert_axis="data" if (expert_parallel and cfg.num_experts) else None)
+        gossip = ("pod", "data") if multi_pod else ("data",)
+        return DistPlan(
+            gossip_axes=gossip, tensor_axes=("model",), batch_axes=(),
+            n_workers=int(np.prod([sizes[a] for a in gossip])))
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    if tp_only is None:
+        tp_only = pb <= sizes.get("model", 1) * 16e9 * 0.6
+    ep_axis = None
+    if expert_parallel and cfg.num_experts and \
+            cfg.num_experts % sizes.get("model", 1) == 0:
+        ep_axis = "model"  # experts resident, tokens all_to_all (moe_ep.py)
+    return DistPlan(gossip_axes=(),
+                    tensor_axes=("model",) if tp_only else ("data", "model"),
+                    batch_axes=batch_axes, n_workers=1, expert_axis=ep_axis)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_STACKED = re.compile(r"\['(layers|enc_layers)'\]")
+
+
+def _leaf_spec(path: str, shape: tuple[int, ...], plan: DistPlan,
+               sizes: dict[str, int], lead: tuple = ()) -> P:
+    """Megatron-pattern sharding for the known matmul weights, largest-dim
+    heuristic for the rest.
+
+    w_gate/w_up → column-parallel (shard the OUTPUT d_ff dim); w_down →
+    row-parallel (shard the INPUT d_ff dim, dim −2). The size heuristic gets
+    this wrong whenever d_model > d_ff (granite: 1024 > 512), sharding the
+    contraction dim of BOTH layers and forcing resharding between them.
+    """
+    protect = 1 if _STACKED.search(path) else 0
+    entries: list = list(lead) + [None] * len(shape)
+    model_ax = plan.tensor_axes[-1]          # the intra-layer TP axis
+    used: set[int] = set()
+
+    def try_assign(d: int, ax: str) -> bool:
+        if d in used or d < protect or shape[d] < 2 * sizes[ax] or shape[d] % sizes[ax]:
+            return False
+        entries[len(lead) + d] = ax
+        used.add(d)
+        return True
+
+    moe_ep = plan.expert_axis and "moe" in path
+    if re.search(r"\['(w_gate|w_up)'\]$", path):
+        if moe_ep and len(shape) >= 3:
+            entries[len(lead) + protect] = plan.expert_axis  # experts resident
+            used.add(protect)
+        if plan.expert_axis != model_ax or not moe_ep:
+            try_assign(len(shape) - 1, model_ax)      # column-parallel: d_ff out
+    elif re.search(r"\['w_down'\]$", path):
+        if moe_ep and len(shape) >= 3:
+            entries[len(lead) + protect] = plan.expert_axis
+            used.add(protect)
+        if plan.expert_axis != model_ax or not moe_ep:
+            try_assign(len(shape) - 2, model_ax)      # row-parallel: d_ff in
+    elif re.search(r"\['(wq|wk|wv)'\]$", path):
+        try_assign(len(shape) - 1, model_ax)          # heads out
+    elif re.search(r"\['wo'\]$", path):
+        try_assign(len(shape) - 2, model_ax)          # heads in (row-parallel)
+
+    # fill remaining tensor axes by size rank (2-D plans / untyped leaves)
+    order = sorted(range(protect, len(shape)), key=lambda d: -shape[d])
+    for ax in plan.tensor_axes:
+        if any(entries[len(lead) + d] == ax for d in range(len(shape))):
+            continue
+        for d in order:
+            if try_assign(d, ax):
+                break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, plan: DistPlan, mesh, *, stacked: bool = False):
+    """PartitionSpec pytree matching transformer.init_params(cfg)."""
+    from repro.models import transformer
+    shapes = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    return tree_param_specs(shapes, plan, mesh,
+                            stacked=False) if not stacked else tree_param_specs(
+        jax.tree.map(lambda l: jax.ShapeDtypeStruct((plan.n_workers,) + l.shape,
+                                                    l.dtype), shapes),
+        plan, mesh, stacked=True)
+
+
+def tree_param_specs(tree, plan: DistPlan, mesh, *, stacked: bool = False):
+    """Specs for a params-shaped pytree (params / optimizer momentum / grads).
+    ``stacked``: leaves carry a leading (n_workers,) axis → gossip axes."""
+    sizes = axis_sizes(mesh)
+    lead = (plan.gossip_spec_axis,) if stacked else ()
+
+    def assign(path, leaf):
+        shape = tuple(leaf.shape)
+        if stacked:
+            shape = shape[1:]
+        if not shape:  # scalars (step counters)
+            return P()
+        return _leaf_spec(jax.tree_util.keystr(path), shape, plan, sizes, lead)
+
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, plan: DistPlan, mesh, batch_shape: dict, *,
+                stacked: bool = False):
+    """Specs for {tokens, labels(, embeds)} dicts (stacked adds worker axis 0)."""
+    sizes = axis_sizes(mesh)
+    lead = (plan.gossip_spec_axis,) if stacked else ()
+    baxis = None
+    if plan.batch_axes:
+        b = batch_shape["tokens"][1 if stacked else 0]
+        avail = tuple(a for a in plan.batch_axes if a not in plan.gossip_axes)
+        total = int(np.prod([sizes[a] for a in avail])) if avail else 0
+        if avail and b % total == 0 and b >= total:
+            baxis = avail if len(avail) > 1 else avail[0]
+    out = {}
+    for k, shp in batch_shape.items():
+        rest = [None] * (len(shp) - len(lead) - 1)
+        out[k] = P(*lead, baxis, *rest)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, plan: DistPlan, mesh, caches, batch: int):
+    """Specs for transformer.Caches: batch over batch_axes (when divisible),
+    KV seq over "model", SSM head dims over "model"."""
+    sizes = axis_sizes(mesh)
+    total = int(np.prod([sizes[a] for a in plan.batch_axes])) if plan.batch_axes else 1
+    if plan.batch_axes and batch % total == 0 and batch >= total:
+        baxis = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+        seq_axes: tuple[str, ...] = ("model",)
+    else:
+        baxis = None
+        # batch unshardable (long_500k B=1) → give the seq dim everything
+        seq_axes = tuple(a for a in ("data", "model") if a in sizes)
+
+    seq_total = int(np.prod([sizes[a] for a in seq_axes]))
+
+    def assign(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        if ".kv" in key or "shared_kv" in key or "cross_kv" in key:
+            # (L_or_G, B, C, Hkv, hd)
+            spec: list = [None] * len(shape)
+            if len(shape) >= 2:
+                spec[1] = baxis
+            if len(shape) >= 3:
+                C = shape[2]
+                if C % seq_total == 0 and C >= seq_total:
+                    spec[2] = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+            return P(*spec)
+        if ".ssm" in key:
+            # conv state (L,B,d_inner,k) or ssd state (L,B,H,dh,state)
+            spec = [None] * len(shape)
+            if len(shape) >= 2:
+                spec[1] = baxis
+            for d in range(2, len(shape)):
+                if shape[d] % sizes.get("model", 1) == 0 and shape[d] >= 2 * sizes.get("model", 1):
+                    spec[d] = "model"
+                    break
+            return P(*spec)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(assign, caches)
+
+
+def with_sharding(mesh, tree, specs):
+    """ShapeDtypeStruct tree with NamedShardings attached (for .lower())."""
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        tree, specs)

@@ -1,0 +1,99 @@
+"""BA-Topo generation CLI — the paper's optimizer as a standalone tool.
+
+  PYTHONPATH=src python -m repro.launch.topo --n 16 --r 32                  # Eq. 9
+  PYTHONPATH=src python -m repro.launch.topo --n 16 --r 32 \
+      --bandwidths 9.76x8,3.25x8                                            # §IV-B1
+  PYTHONPATH=src python -m repro.launch.topo --n 8 --r 12 --scenario intra  # §IV-B2
+  PYTHONPATH=src python -m repro.launch.topo --n 16 --r 48 --scenario bcube # §IV-B3
+  PYTHONPATH=src python -m repro.launch.topo --n 32 --r 64 --scenario pods --pods 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import (
+    BATopoConfig,
+    bcube_constraints,
+    intra_server_constraints,
+    node_level_constraints,
+    optimize_topology,
+    pod_boundary_constraints,
+)
+from repro.core.bandwidth import homo_edge_bandwidth, min_edge_bandwidth, t_iter
+from repro.core.graph import weight_matrix_from_weights
+
+
+def parse_bandwidths(spec: str, n: int) -> np.ndarray:
+    """'9.76x8,3.25x8' → [9.76]*8 + [3.25]*8."""
+    vals: list[float] = []
+    for part in spec.split(","):
+        if "x" in part:
+            v, k = part.split("x")
+            vals.extend([float(v)] * int(k))
+        else:
+            vals.append(float(part))
+    assert len(vals) == n, f"bandwidth list has {len(vals)} entries, n={n}"
+    return np.asarray(vals)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, required=True)
+    ap.add_argument("--r", type=int, required=True)
+    ap.add_argument("--scenario", default="homo",
+                    choices=["homo", "node", "intra", "bcube", "pods"])
+    ap.add_argument("--bandwidths", default=None,
+                    help="per-node GB/s for --scenario node, e.g. 9.76x8,3.25x8")
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--cross-pod-cap", type=int, default=4,
+                    help="max edges crossing each pod boundary")
+    ap.add_argument("--sa-iters", type=int, default=1500)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write topology json")
+    args = ap.parse_args()
+
+    cfg = BATopoConfig(sa_iters=args.sa_iters, seed=args.seed)
+    n = args.n
+    if args.scenario == "homo":
+        topo = optimize_topology(n, args.r, "homo", cfg=cfg)
+    elif args.scenario == "node":
+        assert args.bandwidths, "--bandwidths required for node scenario"
+        b = parse_bandwidths(args.bandwidths, n)
+        topo = optimize_topology(n, args.r, "node", node_bandwidths=b, cfg=cfg)
+    elif args.scenario == "intra":
+        cs = intra_server_constraints(n)
+        topo = optimize_topology(n, args.r, "constraint", cs=cs, cfg=cfg)
+    elif args.scenario == "bcube":
+        cs = bcube_constraints(n)
+        topo = optimize_topology(n, args.r, "constraint", cs=cs, cfg=cfg)
+    else:  # pods
+        cs = pod_boundary_constraints(n, args.pods, args.cross_pod_cap)
+        topo = optimize_topology(n, args.r, "constraint", cs=cs, cfg=cfg)
+
+    W = weight_matrix_from_weights(n, topo.edges, topo.g)
+    bw = homo_edge_bandwidth(topo)
+    report = {
+        "name": topo.name,
+        "n": n, "edges": len(topo.edges),
+        "r_asym": topo.r_asym(),
+        "max_degree": int(np.max(np.count_nonzero(W - np.diag(np.diag(W)), axis=1))),
+        "b_min_GBs": min_edge_bandwidth(bw),
+        "t_iter_ms": t_iter(min_edge_bandwidth(bw)),
+        "meta": {k: v for k, v in topo.meta.items()
+                 if isinstance(v, (str, int, float, bool))},
+        "edge_list": [list(e) for e in topo.edges],
+        "weights": np.asarray(topo.g).round(6).tolist(),
+    }
+    print(json.dumps({k: v for k, v in report.items()
+                      if k not in ("edge_list", "weights")}, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

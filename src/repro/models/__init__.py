@@ -1,0 +1,6 @@
+"""Model zoo: composable JAX model definitions for the assigned architectures."""
+from .transformer import (Caches, decode_step, init_caches, init_params, layer_windows,
+                          param_count, prefill, train_loss)
+
+__all__ = ["Caches", "decode_step", "init_caches", "init_params", "layer_windows",
+           "param_count", "prefill", "train_loss"]

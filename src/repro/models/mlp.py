@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+__all__ = ["init_swiglu", "swiglu", "init_gelu_mlp", "gelu_mlp"]
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x):
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "b_in": jnp.zeros((d_ff,), dtype=dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype),
+        "b_out": jnp.zeros((d_model,), dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    return jax.nn.gelu(x @ params["w_in"] + params["b_in"]) @ params["w_out"] + params["b_out"]

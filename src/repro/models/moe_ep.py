@@ -1,0 +1,137 @@
+"""Expert-parallel MoE block (shard_map + all_to_all) — the §Perf "designed
+next step" for collective-bound MoE shapes.
+
+The pjit path (moe.py) shards expert FFN weights FSDP-style, paying a
+re-gather of every expert's weights each layer. Here the expert dim is
+MANUALLY sharded over the "model" axis: weights stay resident, and the
+TOKENS move — two `all_to_all`s of capacity buffers per layer, the classic
+GShard/Switch expert-parallel schedule, which on TPU lowers to a single
+fused ICI all-to-all instead of per-layer weight gathers.
+
+Layout inside shard_map(axis_names={"model"}, D = devices on the axis):
+  x        (B, S, d)          — replicated over "model" (the caller's
+                                 activations; batch stays sharded over the
+                                 auto "data" axis)
+  w_gate   (E/D, d, F)        — this device's experts (manual shard)
+  dispatch (D, C, d)          — slot buffer per TARGET device
+  all_to_all → (D, C, d)      — slots for MY experts from every source
+  FFN on (D·C, d) with my E/D experts → all_to_all back → combine.
+
+Requires E % D == 0 (granite: 32 % 16 ✓). mixtral's E = 8 on a 16-axis
+needs virtual-expert splitting (each expert column-split in two) — not
+implemented; build_step falls back to the pjit path and says so.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["moe_forward_expert_parallel", "supports_expert_parallel"]
+
+
+def supports_expert_parallel(num_experts: int, axis_size: int) -> bool:
+    return num_experts % axis_size == 0
+
+
+def _local_moe(xt, topi, topv, keep, w_gate, w_up, w_down, *, axis: str,
+               E: int, top_k: int, C: int):
+    """Body inside shard_map. xt (T_loc, d) this token-shard's rows; w_*
+    carry this device's E_loc experts. C = per-(shard, expert) capacity.
+
+    Slot streams are PER EXPERT (not per device): the receiver then runs a
+    dense (E_loc, D·C, d) batched FFN with zero weight gathers — a per-slot
+    weight gather would materialize a (C, d, F) tensor per layer.
+    """
+    D = jax.lax.axis_size(axis)
+    E_loc = E // D
+    T, d = xt.shape
+
+    # per-expert slot positions (same accounting as the pjit path)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)        # (T, k, E)
+    flat = onehot.reshape(T * top_k, E)
+    pos = (jnp.cumsum(flat, axis=0) - flat).reshape(T, top_k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (T, k)
+    ok = keep & (pos < C)
+    slot = jnp.where(ok, pos, C)
+
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    for j in range(top_k):                                   # static k
+        buf = buf.at[topi[:, j], slot[:, j]].add(xt, mode="drop")
+
+    # (E, C, d) → (D, E_loc, C, d); all_to_all swaps the device dim: each
+    # device receives every token-shard's slots for ITS experts
+    buf = buf.reshape(D, E_loc, C, d)
+    recv = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                              tiled=False)                   # (D, E_loc, C, d)
+
+    # dense batched FFN over my experts — no gathers
+    h = jax.nn.silu(jnp.einsum("secd,edf->secf", recv, w_gate))
+    h = h * jnp.einsum("secd,edf->secf", recv, w_up)
+    out_slots = jnp.einsum("secf,efd->secd", h, w_down)      # (D, E_loc, C, d)
+
+    back = jax.lax.all_to_all(out_slots, axis, split_axis=0, concat_axis=0,
+                              tiled=False).reshape(E, C, d)
+
+    out = jnp.zeros((T, d), xt.dtype)
+    for j in range(top_k):
+        g = back[topi[:, j], jnp.minimum(slot[:, j], C - 1)]
+        w = (topv[:, j] * ok[:, j]).astype(xt.dtype)
+        out = out + g * w[:, None]
+    return out
+
+
+def moe_forward_expert_parallel(params, x, *, top_k: int, axis: str = "model",
+                                token_axes=("data",),
+                                capacity_factor: float = 1.25,
+                                min_capacity: int = 1, mesh=None):
+    """Drop-in for moe.moe_forward on an E-divisible mesh axis.
+
+    Router + top-k run replicated (cheap); dispatch/FFN/combine run inside a
+    partial-manual shard_map, manual over BOTH the expert axis and the token
+    (batch) axes — each token shard dispatches only its own rows, so the
+    capacity buffers scale with LOCAL tokens (a global-C buffer is D× too
+    large). Weights enter with their expert dim manually sharded — they
+    never move; only capacity slots cross the ``axis`` all_to_all.
+    """
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = (xt @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    keep = jnp.ones(topi.shape, bool)
+
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    Dsz = sizes[axis]
+    token_axes = tuple(a for a in token_axes if a in sizes and a != axis)
+    t_shards = int(np.prod([sizes[a] for a in token_axes])) if token_axes else 1
+    if T % t_shards:
+        token_axes, t_shards = (), 1
+    T_loc = T // t_shards
+    # per (token-shard, expert) capacity
+    C = max(int(capacity_factor * T_loc * top_k / E), 1,
+            -(-min_capacity // t_shards))
+
+    tok = (token_axes if len(token_axes) > 1 else token_axes[0]) \
+        if token_axes else None
+    body = functools.partial(_local_moe, axis=axis, E=E, top_k=top_k, C=C)
+    smapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(tok), P(tok), P(tok), P(tok), P(axis), P(axis), P(axis)),
+        out_specs=P(tok),
+        axis_names={axis} | set(token_axes), check_vma=False)
+    out = smapped(xt, topi, topv.astype(x.dtype), keep,
+                  params["w_gate"], params["w_up"], params["w_down"])
+
+    f = jnp.mean(jax.nn.one_hot(topi, E).sum(1), axis=0)
+    aux = E * jnp.sum(f * jnp.mean(probs, axis=0)) / top_k
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,55 @@
+"""Logical-axis sharding hints (MaxText-style logical rules).
+
+Model code annotates internal buffers with LOGICAL axis names
+(``hint(x, "moe_expert", "moe_capacity", "embed")``). The launch layer
+installs a {logical → mesh-axis|None} rules table per distribution plan;
+with no rules installed (unit tests, single-device sim) hints are no-ops,
+keeping the model code mesh-agnostic.
+
+Needed because XLA's sharding propagation gives up on scatter/gather-fed
+buffers (the MoE dispatch) and replicates them — hundreds of GB/device at
+mixtral scale (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["set_rules", "get_rules", "rules_ctx", "hint"]
+
+_RULES: dict[str, str | None] = {}
+
+
+def set_rules(rules: dict[str, str | None] | None) -> None:
+    global _RULES
+    _RULES = dict(rules) if rules else {}
+
+
+def get_rules() -> dict[str, str | None]:
+    return dict(_RULES)
+
+
+@contextmanager
+def rules_ctx(rules: dict[str, str | None] | None):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def hint(x, *logical_axes: str | None):
+    """Apply a sharding constraint by logical axis names (None = replicated).
+    No-op when no rules are installed or the spec is fully unresolved."""
+    if not _RULES:
+        return x
+    entries = [(_RULES.get(a) if a else None) for a in logical_axes]
+    if all(e is None for e in entries):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:
+        return x  # no ambient mesh (e.g. sim path) — hints are best-effort

@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD forward for train/prefill (quadratic within chunks, linear state
+passing across chunks) and an O(1)-per-token recurrent decode step. Heads of
+size P = ssm_head_dim over d_inner = expand·d_model channels; one B/C group
+(G = 1); scalar decay A per head.
+
+Recurrence (per head):
+  h_t = exp(A·dt_t) · h_{t−1} + dt_t · B_t ⊗ x_t        h ∈ R^{P×N}
+  y_t = (C_t · h_tᵀ) + D ⊙ x_t
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+__all__ = ["SSMCache", "init_mamba2", "mamba2_forward", "mamba2_decode", "init_ssm_cache", "ssd_chunk_scan"]
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, K−1, conv_channels) rolling conv input buffer
+    state: jnp.ndarray  # (B, H, P, N) SSD state
+
+
+def _conv_channels(cfg) -> int:
+    # x, B, C are convolved (Mamba-2): d_inner + 2·N
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm_cache(batch: int, cfg, dtype) -> SSMCache:
+    K = cfg.ssm_conv
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, K - 1, _conv_channels(cfg)), dtype=dtype),
+        state=jnp.zeros((batch, H, P, N), dtype=jnp.float32),
+    )
+
+
+def init_mamba2(key, cfg, dtype) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * di + 2 * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, d, proj_out, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, _conv_channels(cfg)), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((_conv_channels(cfg),), dtype=dtype),
+        "A_log": jnp.zeros((H,), dtype=jnp.float32),       # A = −exp(A_log) ∈ (−∞, 0)
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "norm": jnp.zeros((di,), dtype=dtype),             # gated RMSNorm scale
+        "out_proj": dense_init(k3, di, d, dtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di: 2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_depthwise_conv(xBC, w, b):
+    """xBC: (B, S, C); w: (K, C) depthwise causal conv + SiLU."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunk_scan(x, dt, A, B_mat, C_mat, chunk: int, h0=None, use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    B_mat/C_mat: (B, S, N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = B_mat.shape[-1]
+    S0 = S
+    if S % chunk:
+        # pad tail with dt=0 steps: decay exp(A·0)=1 and zero input leave the
+        # final state untouched; padded outputs are sliced off below
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    Q = chunk
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = B_mat.reshape(Bsz, nc, Q, N)
+    Cc = C_mat.reshape(Bsz, nc, Q, N)
+
+    la = jnp.cumsum(A[None, None, None, :] * dtc, axis=2)          # (B,nc,Q,H) log-decay cumsum
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), dtype=jnp.float32)
+    causal = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+
+    # ONE streaming scan over chunks: the (B,Q,Q,H) decay block and all other
+    # intra-chunk intermediates live for one chunk only (materializing them
+    # for all nc chunks at once is O(S·Q·H) — hundreds of GB at 32k/500k).
+    # This is the VMEM-resident structure the Pallas kernel mirrors on TPU.
+    def scan_fn(h, inp):
+        xq, dtq, laq, Bq, Cq = inp  # (B,Q,H,P),(B,Q,H),(B,Q,H),(B,Q,N),(B,Q,N)
+        if use_kernel:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+
+            y_intra, st = ssd_ops.ssd_intra_chunk(
+                xq[:, None], dtq[:, None], laq[:, None], Bq[:, None], Cq[:, None])
+            y_intra = y_intra[:, 0]
+            st = st[:, 0]
+        else:
+            Ldec = jnp.exp(laq[:, :, None, :] - laq[:, None, :, :])   # (B,Q_t,Q_s,H)
+            # f32 literal: a weak 0.0 promotes to f64 under x64 (the ADMM
+            # core enables x64 globally) and breaks the scan carry dtype
+            Ldec = jnp.where(causal[None, :, :, None], Ldec,
+                             jnp.zeros((), Ldec.dtype))
+            CB = jnp.einsum("btn,bsn->bts", Cq, Bq)                   # (B,Q,Q)
+            y_intra = jnp.einsum("bts,btsh,bsh,bshp->bthp", CB, Ldec, dtq, xq)
+            decay_out = jnp.exp(laq[:, -1:, :] - laq)                 # (B,Q,H)
+            st = jnp.einsum("bsh,bsh,bsn,bshp->bhpn", decay_out, dtq, Bq, xq)
+        # incoming-state contribution + state update
+        y_inter = jnp.einsum("btn,bth,bhpn->bthp", Cq, jnp.exp(laq),
+                             h.astype(xq.dtype))
+        dec = jnp.exp(laq[:, -1, :])                                  # (B,H)
+        h_new = (dec[:, :, None, None] * h).astype(jnp.float32) + st.astype(jnp.float32)
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    swap = lambda a: jnp.moveaxis(a, 1, 0)                            # nc leading
+    hT, yc = jax.lax.scan(
+        jax.checkpoint(scan_fn, prevent_cse=False), h0.astype(jnp.float32),
+        (swap(xc), swap(dtc), swap(la), swap(Bc), swap(Cc)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, P)
+    return y[:, :S0], hT
+
+
+def mamba2_forward(params, x, cfg, cache: SSMCache | None = None, use_kernel: bool = False):
+    """Full-sequence forward. x: (B, S, D) → (out, new_cache)."""
+    B, S, D = x.shape
+    proj = x @ params["in_proj"]
+    z, xBC, dt = _split_proj(proj, cfg)
+    xBC = _causal_depthwise_conv(xBC, params["conv_w"], params["conv_b"])
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    B_mat = xBC[..., di: di + N]
+    C_mat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])
+    y, hT = ssd_chunk_scan(xs, dt, A, B_mat, C_mat, cfg.ssm_chunk, use_kernel=use_kernel)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)     # gated norm
+    out = (y @ params["out_proj"]).astype(x.dtype)  # f32 D/dt math → back to model dtype
+    new_cache = None
+    if cache is not None:
+        K = cfg.ssm_conv
+        # store last K−1 *pre-conv* xBC inputs for decode continuity
+        pre = _split_proj(proj, cfg)[1]
+        tail = jnp.pad(pre, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))[:, -(K - 1):]
+        new_cache = SSMCache(conv=tail.astype(cache.conv.dtype), state=hT)
+    return out, new_cache
+
+
+def mamba2_decode(params, x, cfg, cache: SSMCache):
+    """Single-token recurrent step. x: (B, 1, D) → (out, new_cache)."""
+    B = x.shape[0]
+    di, N, H, P, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    proj = x[:, 0] @ params["in_proj"]                                  # (B, proj)
+    z, xBC_new, dt = _split_proj(proj, cfg)
+    # causal conv over the rolling buffer
+    window = jnp.concatenate([cache.conv, xBC_new[:, None]], axis=1)    # (B, K, C)
+    xBC = jax.nn.silu(jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"])
+    xs = xBC[..., :di].reshape(B, H, P)
+    B_mat = xBC[..., di: di + N]
+    C_mat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dec = jnp.exp(A[None] * dt)                                         # (B,H)
+    h = dec[:, :, None, None] * cache.state + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, B_mat, xs.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C_mat, h.astype(x.dtype)) + params["D"][None, :, None] * xs
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None].astype(x.dtype)
+    new_conv = window[:, 1:]
+    return out, SSMCache(conv=new_conv.astype(cache.conv.dtype), state=h)

@@ -1,0 +1,119 @@
+"""SGD+momentum (the paper's DSGD setting: lr 0.05, momentum 0.9, wd 1e-4)
+and AdamW, as (init, update) pairs over parameter pytrees.
+
+Optimizer state lives in NamedTuples of pytrees so it shards with the
+parameters under pjit (state inherits each leaf's PartitionSpec).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SGDState", "AdamWState", "OptState", "sgd_momentum", "adamw",
+           "apply_updates", "global_norm", "clip_by_global_norm", "make_optimizer"]
+
+
+class SGDState(NamedTuple):
+    momentum: dict  # pytree like params
+    step: jnp.ndarray
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    step: jnp.ndarray
+
+
+OptState = SGDState | AdamWState
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), grads), g
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd_momentum(lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+                 momentum: float = 0.9, weight_decay: float = 1e-4,
+                 nesterov: bool = False):
+    """Paper §VI-B hyper-parameters by default. Returns (init, update).
+
+    update(grads, state, params) -> (updates, new_state)
+    """
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> SGDState:
+        return SGDState(jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                        jnp.zeros((), jnp.int32))
+
+    def update(grads, state: SGDState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g
+            d = (g + momentum * m_new) if nesterov else m_new
+            return -lr_t * d, m_new
+
+        flat = jax.tree.map(upd, grads, state.momentum, params)
+        updates = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        m_new = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, SGDState(m_new, step)
+
+    return init, update
+
+
+def adamw(lr: Callable[[jnp.ndarray], jnp.ndarray] | float, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamWState(jax.tree.map(zeros, params), jax.tree.map(zeros, params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu_new = b1 * mu + (1 - b1) * g
+            nu_new = b2 * nu + (1 - b2) * jnp.square(g)
+            mhat = mu_new / c1
+            nhat = nu_new / c2
+            d = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return -lr_t * d, mu_new, nu_new
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        first = lambda t: t[0]
+        is_t = lambda t: isinstance(t, tuple)
+        updates = jax.tree.map(first, flat, is_leaf=is_t)
+        mu_new = jax.tree.map(lambda t: t[1], flat, is_leaf=is_t)
+        nu_new = jax.tree.map(lambda t: t[2], flat, is_leaf=is_t)
+        return updates, AdamWState(mu_new, nu_new, step)
+
+    return init, update
+
+
+def make_optimizer(name: str, lr, **kw):
+    """Registry used by the launcher (--optimizer sgd|adamw)."""
+    if name == "sgd":
+        return sgd_momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise KeyError(f"unknown optimizer {name!r}")

@@ -1,0 +1,38 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant_schedule", "linear_warmup", "cosine_schedule", "warmup_cosine"]
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.minimum(step.astype(jnp.float32), total_steps)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * s / max(total_steps, 1)))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        decay = final_frac + (1.0 - final_frac) * cos
+        return lr * jnp.where(s < warmup_steps, warm, decay)
+    return fn

@@ -1,0 +1,12 @@
+"""Three-term roofline analysis from compiled dry-run artifacts."""
+from .analysis import (
+    HW,
+    RooflineReport,
+    analytic_flops_bytes,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_report,
+)
+
+__all__ = ["HW", "RooflineReport", "analytic_flops_bytes", "collective_bytes_from_hlo",
+           "model_flops", "roofline_report"]

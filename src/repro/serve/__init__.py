@@ -1,0 +1,12 @@
+"""Batched KV-cache serving engine (prefill + single-token decode steps)."""
+from .engine import (
+    DecodeState,
+    ServeConfig,
+    ServingEngine,
+    greedy_sample,
+    make_functional_serve_step,
+    make_serve_step,
+)
+
+__all__ = ["DecodeState", "ServeConfig", "ServingEngine", "greedy_sample",
+           "make_functional_serve_step", "make_serve_step"]

@@ -1,0 +1,132 @@
+"""Serving runtime.
+
+``make_serve_step`` builds the jit-able one-token decode step the decode
+input shapes (decode_32k, long_500k) lower in the dry-run: ONE new token per
+request against a KV/SSM cache of ``seq_len`` past positions.
+
+``ServingEngine`` is the host-side loop: admit a batch of prompts, prefill,
+then decode greedily/with temperature until max_new_tokens — the end-to-end
+"serve a small model with batched requests" example builds on it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+__all__ = ["ServeConfig", "DecodeState", "make_serve_step", "greedy_sample",
+           "ServingEngine"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int
+    cache_len: int                 # past-context capacity (= shape.seq_len)
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 → greedy
+    long_context: bool = False     # ring/SWA caches + SSM state path
+    use_kernel: bool = False       # Pallas decode_attention
+
+
+class DecodeState(NamedTuple):
+    tokens: jnp.ndarray            # (B, 1) last emitted token
+    caches: Any                    # transformer.Caches
+    pos: jnp.ndarray               # scalar int32 absolute position
+    rng: jnp.ndarray
+    done: jnp.ndarray              # (B,) bool — hit EOS
+
+
+def greedy_sample(logits: jnp.ndarray, rng, temperature: float):
+    """logits (B, 1, V) → (B, 1) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    g = -jnp.log(-jnp.log(jax.random.uniform(rng, logits[:, -1].shape) + 1e-9) + 1e-9)
+    return jnp.argmax(logits[:, -1] / temperature + g, axis=-1)[:, None].astype(jnp.int32)
+
+
+def make_serve_step(cfg, scfg: ServeConfig, *, eos_id: int = 0, donate: bool = True):
+    """One-token decode step: (DecodeState) → DecodeState. jit'd with cache
+    donation so the KV cache updates in place (the serving memory invariant)."""
+
+    def step(state: DecodeState) -> DecodeState:
+        logits, caches = transformer.decode_step(
+            cfg_params_holder["params"], cfg, state.tokens, state.caches, state.pos,
+            long_context=scfg.long_context, use_kernel=scfg.use_kernel)
+        rng, sub = jax.random.split(state.rng)
+        nxt = greedy_sample(logits, sub, scfg.temperature)
+        done = state.done | (nxt[:, 0] == eos_id)
+        nxt = jnp.where(done[:, None], jnp.full_like(nxt, eos_id), nxt)
+        return DecodeState(nxt, caches, state.pos + 1, rng, done)
+
+    # Params are closed over (weights are servable constants); the holder lets
+    # the engine swap checkpoints without retracing.
+    cfg_params_holder: dict = {}
+
+    def bind(params):
+        cfg_params_holder["params"] = params
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+    return bind
+
+
+def make_functional_serve_step(cfg, scfg: ServeConfig, *, eos_id: int = 0):
+    """(params, state) → state, params as a traced argument — the form the
+    dry-run lowers (params are sharded inputs there, not constants)."""
+
+    def step(params, state: DecodeState) -> DecodeState:
+        logits, caches = transformer.decode_step(
+            params, cfg, state.tokens, state.caches, state.pos,
+            long_context=scfg.long_context, use_kernel=scfg.use_kernel)
+        if scfg.temperature > 0.0:
+            rng, sub = jax.random.split(state.rng)
+            nxt = greedy_sample(logits, sub, scfg.temperature)
+        else:  # greedy — keep rng inert (lowers with a raw uint32 stand-in)
+            rng = state.rng
+            nxt = greedy_sample(logits, rng, 0.0)
+        done = state.done | (nxt[:, 0] == eos_id)
+        nxt = jnp.where(done[:, None], jnp.full_like(nxt, eos_id), nxt)
+        return DecodeState(nxt, caches, state.pos + 1, rng, done)
+
+    return step
+
+
+class ServingEngine:
+    """Host loop: admit → prefill → decode until done/max_new_tokens."""
+
+    def __init__(self, cfg, params, scfg: ServeConfig, *, eos_id: int = 0):
+        self.cfg, self.scfg, self.eos_id = cfg, scfg, eos_id
+        self.params = params
+        self._step = make_serve_step(cfg, scfg, eos_id=eos_id, donate=False)(params)
+        self._prefill = jax.jit(
+            lambda p, batch: transformer.prefill(p, cfg, batch,
+                                                 cache_cap=scfg.cache_len,
+                                                 long_context=scfg.long_context))
+
+    def generate(self, prompts: np.ndarray, extra_inputs: dict | None = None,
+                 seed: int = 0) -> np.ndarray:
+        """prompts: (B, S) int32 (right-aligned, no padding support needed for
+        the fixed-shape engine). Returns (B, max_new_tokens) int32."""
+        B, S = prompts.shape
+        assert B == self.scfg.batch_size, (B, self.scfg.batch_size)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        logits, caches = self._prefill(self.params, batch)
+        rng = jax.random.PRNGKey(seed)
+        first = greedy_sample(logits, rng, self.scfg.temperature)
+        pos = S + (self.cfg.frontend_tokens if self.cfg.arch_type == "vlm" else 0)
+        state = DecodeState(first, caches, jnp.asarray(pos, jnp.int32), rng,
+                            jnp.zeros((B,), bool))
+        out = [np.asarray(first[:, 0])]
+        for _ in range(self.scfg.max_new_tokens - 1):
+            state = self._step(state)
+            out.append(np.asarray(state.tokens[:, 0]))
+            if bool(state.done.all()):
+                break
+        return np.stack(out, axis=1)

@@ -1,0 +1,146 @@
+"""Algorithm 2 (ADMM) — solver correctness, backend agreement, solution quality."""
+import numpy as np
+import pytest
+
+from repro.core.admm import ADMMConfig, HeterogeneousADMM, HomogeneousADMM, _proj_card_nonneg, _proj_psd
+from repro.core.constraints import intra_server_constraints, node_level_constraints
+from repro.core.graph import all_edges, edge_index, is_connected, r_asym, weight_matrix_from_weights
+from repro.core.weights import metropolis_weights, polish_weights
+
+import jax.numpy as jnp
+
+
+def _warm(n, deg):
+    from repro.core.anneal import greedy_degree_graph
+
+    rng = np.random.default_rng(0)
+    edges = greedy_degree_graph(n, np.full(n, deg), rng)
+    eidx = edge_index(n)
+    m = len(all_edges(n))
+    g0 = np.zeros(m)
+    gm = metropolis_weights(n, edges)
+    for k, e in enumerate(edges):
+        g0[eidx[e]] = gm[k]
+    return g0, edges
+
+
+def test_proj_psd_nsd():
+    rng = np.random.default_rng(0)
+    M = rng.normal(size=(6, 6))
+    P = np.asarray(_proj_psd(jnp.asarray(M), +1.0))
+    Nn = np.asarray(_proj_psd(jnp.asarray(M), -1.0))
+    assert np.linalg.eigvalsh(P).min() > -1e-10
+    assert np.linalg.eigvalsh(Nn).max() < 1e-10
+    # projection of an already-PSD matrix is (the symmetrization of) itself
+    S = M @ M.T
+    np.testing.assert_allclose(np.asarray(_proj_psd(jnp.asarray(S), +1.0)), S, atol=1e-8)
+
+
+def test_proj_card():
+    v = jnp.asarray(np.array([0.5, -1.0, 0.3, 0.2, 0.9]))
+    ok = jnp.ones(5, dtype=bool)
+    out = np.asarray(_proj_card_nonneg(v, 2, ok))
+    assert (out > 0).sum() == 2
+    assert out[4] == pytest.approx(0.9) and out[0] == pytest.approx(0.5)
+    # inadmissible edges always zero
+    ok2 = jnp.asarray(np.array([False, True, True, True, True]))
+    out2 = np.asarray(_proj_card_nonneg(v, 2, ok2))
+    assert out2[0] == 0.0
+
+
+def test_homo_admm_feasibility_and_quality():
+    """n=8, r=12: ADMM + support extraction yields a connected topology whose
+    polished factor beats the Metropolis ring (the weakest baseline)."""
+    n, r = 8, 12
+    g0, _ = _warm(n, 3)
+    solver = HomogeneousADMM(n, r, ADMMConfig(max_iters=400))
+    res = solver.solve(g0=g0, lam0=0.4)
+    assert res.iters <= 400
+    score = res.g + res.g_raw
+    sel = np.argsort(-score)[:r]
+    edges = [all_edges(n)[l] for l in sorted(sel)]
+    assert is_connected(n, edges)
+    g = polish_weights(n, edges, iters=200)
+    v = r_asym(weight_matrix_from_weights(n, edges, g))
+    from repro.core.topologies import ring
+
+    assert v < ring(n).r_asym()
+    # cardinality respected on the projected side
+    assert int((res.g > 1e-8).sum()) <= r
+
+
+def test_homo_admm_lambda_consistency():
+    """λ̃ from the solver must match 1 − r_asym of the implied W within slack."""
+    n, r = 8, 12
+    g0, _ = _warm(n, 3)
+    solver = HomogeneousADMM(n, r, ADMMConfig(max_iters=600))
+    res = solver.solve(g0=g0, lam0=0.4)
+    W = weight_matrix_from_weights(n, all_edges(n), np.maximum(res.g, 0))
+    # the ADMM iterate is not exactly feasible (residual > 0), allow slack
+    assert abs((1.0 - res.lam_tilde) - r_asym(W)) < 0.2
+
+
+def test_backend_agreement_one_step():
+    """schur_cg and kkt_bicgstab_ilu produce the same X-step solution."""
+    n, r = 6, 8
+    g0, _ = _warm(n, 2)
+    s1 = HomogeneousADMM(n, r, ADMMConfig(max_iters=1, solver="schur_cg"))
+    s2 = HomogeneousADMM(n, r, ADMMConfig(max_iters=1, solver="kkt_bicgstab_ilu"))
+    st1 = s1.init_state(jnp.asarray(g0), 0.4)
+    st2 = s2.init_state(jnp.asarray(g0), 0.4)
+    out1, _ = s1._step(st1)
+    out2, _ = s2._step_ilu(st2)
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]), atol=1e-6)  # x
+    np.testing.assert_allclose(np.asarray(out1[1]), np.asarray(out2[1]), atol=1e-6)  # S
+    np.testing.assert_allclose(np.asarray(out1[3]), np.asarray(out2[3]), atol=1e-6)  # T
+
+
+def test_backend_agreement_kkt_bicgstab():
+    n, r = 6, 8
+    g0, _ = _warm(n, 2)
+    s1 = HomogeneousADMM(n, r, ADMMConfig(max_iters=1))
+    st1 = s1.init_state(jnp.asarray(g0), 0.4)
+    out1, _ = s1._step(st1)
+    out2, _ = s1._step_kkt(st1)
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]), atol=1e-5)
+
+
+def test_hetero_admm_node_level():
+    """Node-level equality constraints: z respects cardinality; solution usable."""
+    n, r = 8, 12
+    e_cap = np.full(n, 3)
+    b = np.full(n, 9.76)
+    cs = node_level_constraints(n, e_cap, b)
+    g0, edges0 = _warm(n, 3)
+    z0 = (g0 > 0).astype(np.float64)
+    solver = HeterogeneousADMM(n, r, np.asarray(cs.M, float), np.asarray(cs.e_cap, float),
+                               ADMMConfig(max_iters=300), equality=True)
+    res = solver.solve(g0=g0, z0=z0, lam0=0.4)
+    assert res.z is not None
+    assert int(res.z.sum()) == r  # binary projection keeps exactly r edges
+
+
+def test_hetero_admm_inequality_slack():
+    cs = intra_server_constraints()
+    n, r = 8, 12
+    g0, edges0 = _warm(n, 3)
+    z0 = (g0 > 0).astype(np.float64)
+    solver = HeterogeneousADMM(n, r, np.asarray(cs.M, float), np.asarray(cs.e_cap, float),
+                               ADMMConfig(max_iters=300), equality=False,
+                               edge_ok=np.asarray(cs.edge_ok))
+    res = solver.solve(g0=g0, z0=z0, lam0=0.4)
+    assert int(res.z.sum()) == r
+
+
+def test_admm_residual_decreases_from_cold_start():
+    """From a cold start the primal residual must drop by orders of magnitude.
+    (From a warm start it starts tiny and can oscillate — the cardinality set
+    is nonconvex — so monotonicity is only asserted for the cold start.)"""
+    n, r = 8, 12
+    solver = HomogeneousADMM(n, r, ADMMConfig(max_iters=300, check_every=10))
+    res = solver.solve(g0=None, lam0=0.4)
+    first = res.history[0][1]
+    best = min(h[1] for h in res.history)
+    # nonconvex splitting → limit cycles are expected; the best residual along
+    # the trajectory must still drop well below the cold-start residual.
+    assert best < 0.15 * first

@@ -1,0 +1,75 @@
+"""Property tests for the ADMM Y-step projections (Alg. 2 / Eq. 24–25)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.admm import _proj_binary_topr, _proj_card_nonneg, _proj_psd
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(2, 60), r=st.integers(1, 20), seed=st.integers(0, 1000))
+def test_card_nonneg_projection(m, r, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=m))
+    ok = jnp.ones(m, bool)
+    p = np.asarray(_proj_card_nonneg(v, r, ok))
+    # feasibility: nonnegative, cardinality ≤ r
+    assert (p >= 0).all()
+    assert (p > 0).sum() <= r
+    # optimality (Euclidean projection): kept entries are the largest
+    # positives of v
+    kept = set(np.nonzero(p > 0)[0].tolist())
+    pos = [i for i in range(m) if float(v[i]) > 0]
+    top = set(sorted(pos, key=lambda i: -float(v[i]))[:r])
+    assert kept <= top
+    for i in kept:
+        np.testing.assert_allclose(p[i], float(v[i]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 1000),
+       sign=st.sampled_from([+1.0, -1.0]))
+def test_psd_nsd_projection(n, seed, sign):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n))
+    A = (A + A.T) / 2
+    P = np.asarray(_proj_psd(jnp.asarray(A), sign))
+    ev = np.linalg.eigvalsh(P)
+    if sign > 0:
+        assert ev.min() >= -1e-8           # PSD cone
+    else:
+        assert ev.max() <= 1e-8            # NSD cone
+    # idempotent
+    P2 = np.asarray(_proj_psd(jnp.asarray(P), sign))
+    np.testing.assert_allclose(P2, P, atol=1e-8)
+    # Euclidean-optimal: distance equals the norm of clipped eigenvalues
+    lam = np.linalg.eigvalsh(A)
+    clipped = np.minimum(lam, 0) if sign > 0 else np.maximum(lam, 0)
+    np.testing.assert_allclose(np.linalg.norm(P - A), np.linalg.norm(clipped),
+                               atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(2, 60), r=st.integers(1, 20), seed=st.integers(0, 1000))
+def test_binary_topr_projection(m, r, seed):
+    r = min(r, m)  # the solver always has r ≤ |E| by construction
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.normal(size=m))
+    ok = jnp.ones(m, bool)
+    z = np.asarray(_proj_binary_topr(v, r, ok))
+    assert set(np.unique(z)).issubset({0.0, 1.0})
+    assert z.sum() <= r
+    # selected entries dominate non-selected
+    if 0 < z.sum() < m:
+        assert float(np.asarray(v)[z > 0].min()) >= float(np.asarray(v)[z == 0].max()) - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(4, 40), r=st.integers(1, 10), seed=st.integers(0, 500))
+def test_card_projection_respects_edge_ok(m, r, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(np.abs(rng.normal(size=m)) + 0.1)
+    ok = jnp.asarray(rng.random(m) < 0.5)
+    p = np.asarray(_proj_card_nonneg(v, r, ok))
+    assert (p[~np.asarray(ok)] == 0).all()

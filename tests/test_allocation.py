@@ -1,0 +1,52 @@
+"""Algorithm 1 invariants + the paper's §VI-A2 worked example."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import allocate_edge_capacity
+
+
+def test_paper_node_hetero_example():
+    """§VI-A2: n=16, bandwidths 3:1 (9.76 vs 3.25 GB/s), r=32 edges →
+    fast nodes get 6 edges, slow nodes 2, b_unit = 3.25/2 = 1.625."""
+    b = np.array([9.76] * 8 + [3.25] * 8)
+    res = allocate_edge_capacity(b, 32)
+    assert int(res.e.sum()) // 2 == 32
+    np.testing.assert_array_equal(res.e[:8], 6)
+    np.testing.assert_array_equal(res.e[8:], 2)
+    # unit bandwidth = min over nodes of b_i/e_i = min(9.76/6, 3.25/2) = 1.625
+    assert abs(res.b_unit - 3.25 / 2) < 1e-9
+
+
+def test_homogeneous_allocation():
+    b = np.full(16, 9.76)
+    res = allocate_edge_capacity(b, 32)
+    assert int(res.e.sum()) // 2 == 32
+    assert np.all(res.e <= 15)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(4, 20),
+    st.integers(0, 10_000),
+)
+def test_allocation_invariants(n, seed):
+    """Invariants: e ≤ ē, Σe/2 == r when feasible, per-edge bandwidth ≥ b_unit."""
+    rng = np.random.default_rng(seed)
+    b = rng.uniform(1.0, 10.0, n)
+    cap = n - 1
+    max_edges = n * cap // 2
+    r = int(rng.integers(n // 2, max_edges // 2 + 1))
+    res = allocate_edge_capacity(b, r)
+    assert np.all(res.e >= 0)
+    assert np.all(res.e <= cap)
+    assert int(res.e.sum()) // 2 <= r
+    # every allocated node can serve its edges at ≥ b_unit:
+    mask = res.e > 0
+    assert np.all(b[mask] / res.e[mask] >= res.b_unit - 1e-9)
+
+
+def test_allocation_trim_branch():
+    # force edge_count > r so lines 6–8 (trim) execute
+    b = np.array([10.0, 10.0, 10.0, 1.0])
+    res = allocate_edge_capacity(b, 2)
+    assert int(res.e.sum()) // 2 <= 2

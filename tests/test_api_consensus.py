@@ -1,0 +1,52 @@
+"""End-to-end optimize_topology + consensus simulation behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import ADMMConfig, BATopoConfig, optimize_topology
+from repro.core.bandwidth import homo_edge_bandwidth, min_edge_bandwidth, t_epoch, t_iter
+from repro.core.consensus import simulate_consensus, time_to_error
+from repro.core.topologies import ring, torus2d
+
+_FAST = BATopoConfig(admm=ADMMConfig(max_iters=250), sa_iters=400, polish_iters=250)
+
+
+def test_optimize_homo_beats_ring():
+    topo = optimize_topology(12, 18, "homo", cfg=_FAST)
+    topo.validate()
+    assert topo.r <= 18
+    assert topo.r_asym() < ring(12).r_asym()
+
+
+def test_optimize_node_respects_allocation():
+    b = np.array([9.76] * 4 + [3.25] * 4)
+    topo = optimize_topology(8, 12, "node", node_bandwidths=b, cfg=_FAST)
+    topo.validate()
+    # slow nodes must not exceed their Algorithm-1 allocation
+    alloc = np.asarray(topo.meta["alloc_e"])
+    assert np.all(topo.deg <= alloc)
+
+
+def test_consensus_rate_matches_r_asym():
+    """Empirical per-iteration error decay ≈ r_asym (Eq. 2 ↔ Eq. 3)."""
+    topo = torus2d(16)
+    tr = simulate_consensus(topo, iters=80, dim=8, seed=1)
+    # asymptotic ratio measured before the fp64 floor (0.6^150 ≈ 1e-33)
+    k0, k1 = 20, 60
+    rate = (tr.errors[k1] / tr.errors[k0]) ** (1.0 / (k1 - k0))
+    assert abs(rate - topo.r_asym()) < 0.02
+
+
+def test_time_model_eq34_eq35():
+    topo = ring(16)
+    bw = homo_edge_bandwidth(topo, 9.76)
+    bmin = min_edge_bandwidth(bw)
+    assert bmin == pytest.approx(9.76 / 2)  # ring degree 2
+    assert t_iter(bmin) == pytest.approx(2 * 5.01)
+    assert t_epoch(bmin, 10) == pytest.approx((2 * 5.01 + 15.21) * 10)
+
+
+def test_time_to_error_monotone_in_bandwidth():
+    topo = torus2d(16)
+    fast = simulate_consensus(topo, iters=400, b_min=9.76)
+    slow = simulate_consensus(topo, iters=400, b_min=1.0)
+    assert time_to_error(fast, 1e-4) < time_to_error(slow, 1e-4)

@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests (brief deliverable f): reduced variant of the
+same family (2 layers, d_model ≤ 512, ≤ 4 experts), one forward/train step on
+CPU asserting output shapes + no NaNs, plus prefill→decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, reduced_for_smoke, shape_supported
+from repro.models import decode_step, init_params, param_count, prefill, train_loss
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def make_batch(cfg, key, B=2, S=64):
+    kt, ke = jax.random.split(key)
+    tokens = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend:
+        batch["embeds"] = jax.random.normal(ke, (B, cfg.frontend_tokens, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_reduced_config(arch, key):
+    cfg = reduced_for_smoke(ARCHS[arch])
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key)
+    loss = jax.jit(lambda p, b: train_loss(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch}: NaN loss"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_updates(arch, key):
+    """One SGD step on the reduced config changes params and reduces no NaN."""
+    cfg = reduced_for_smoke(ARCHS[arch])
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key)
+
+    @jax.jit
+    def step(p, b):
+        loss, g = jax.value_and_grad(lambda p: train_loss(p, cfg, b))(p)
+        p = jax.tree.map(lambda w, gw: w - 0.01 * gw.astype(w.dtype), p, g)
+        return loss, p
+
+    loss, new_params = step(params, batch)
+    assert not bool(jnp.isnan(loss))
+    flat_old = jax.tree.leaves(params)
+    flat_new = jax.tree.leaves(new_params)
+    assert any(not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+               for a, b in zip(flat_old, flat_new))
+    for leaf in flat_new:
+        assert not bool(jnp.any(jnp.isnan(leaf.astype(jnp.float32)))), f"{arch}: NaN param"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_consistency(arch, key):
+    """logits(prefill S+1)[-1] == logits(prefill S → decode token S)."""
+    cfg = reduced_for_smoke(ARCHS[arch])
+    if cfg.num_experts:
+        # capacity-based token dropping is batch-dependent (a prefill in a
+        # 66-token batch may drop what a 2-token decode keeps); disable drops
+        # so the test isolates cache correctness
+        from dataclasses import replace
+        cfg = replace(cfg, moe_capacity_factor=float(cfg.num_experts))
+    params = init_params(key, cfg)
+    B, S = 2, 32
+    batch = make_batch(cfg, key, B=B, S=S + 1)
+    full_logits, _ = jax.jit(lambda p, b: prefill(p, cfg, b))(params, batch)
+
+    n_prefix = cfg.frontend_tokens if cfg.arch_type == "vlm" else 0
+    short = dict(batch)
+    short["tokens"] = batch["tokens"][:, :S]
+    short["labels"] = batch["labels"][:, :S]
+    _, caches = jax.jit(lambda p, b: prefill(p, cfg, b, cache_cap=S + 1 + n_prefix))(
+        params, short)
+    step_logits, _ = jax.jit(
+        lambda p, t, c: decode_step(p, cfg, t, c, jnp.int32(S + n_prefix)))(
+        params, batch["tokens"][:, S:S + 1], caches)
+
+    # decode_step consumes the token at position S (prefix offset for vlm)
+    np.testing.assert_allclose(np.asarray(full_logits[:, -1]),
+                               np.asarray(step_logits[:, -1]), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_shape_matrix_declared(arch):
+    """Every (arch × shape) pair resolves to run-or-documented-skip."""
+    for shape in INPUT_SHAPES:
+        supported = shape_supported(arch, shape)
+        if shape != "long_500k":
+            assert supported
+        elif not supported:
+            cfg = ARCHS[arch]
+            # only pure full-attention archs may skip long_500k
+            assert cfg.arch_type not in ("ssm", "hybrid") and cfg.sliding_window == 0
+
+
+def test_full_configs_match_assignment():
+    """Exact figures from the assignment table."""
+    c = ARCHS["gemma2-9b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (42, 3584, 16, 8, 14336, 256000)
+    assert c.logit_softcap == 30.0 and c.attn_pattern == "local_global"
+    c = ARCHS["mixtral-8x22b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size,
+            c.num_experts, c.experts_per_token) == (56, 6144, 48, 8, 16384, 32768, 8, 2)
+    c = ARCHS["granite-moe-1b-a400m"]
+    assert (c.num_layers, c.d_model, c.num_experts, c.experts_per_token) == (24, 1024, 32, 8)
+    c = ARCHS["mamba2-780m"]
+    assert (c.num_layers, c.d_model, c.ssm_state, c.vocab_size) == (48, 1536, 128, 50280)
+    c = ARCHS["internvl2-1b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.vocab_size) == \
+        (24, 896, 14, 2, 151655)
+    c = ARCHS["whisper-tiny"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size) == \
+        (4, 384, 6, 1536, 51865)
+    c = ARCHS["smollm-135m"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size) == \
+        (30, 576, 9, 3, 1536, 49152)
+    c = ARCHS["minitron-8b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size) == \
+        (32, 4096, 32, 8, 16384, 256000)
+    c = ARCHS["qwen1.5-0.5b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size,
+            c.qkv_bias) == (24, 1024, 16, 16, 2816, 151936, True)
+    c = ARCHS["zamba2-2.7b"]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size,
+            c.ssm_state) == (54, 2560, 32, 32, 10240, 32000, 64)
+    assert c.shared_attn_every > 0
+
+
+def test_param_count_order_of_magnitude():
+    """The reduced smollm config is ~0.3M params (sanity anchor)."""
+    cfg = reduced_for_smoke(ARCHS["smollm-135m"])
+    p = init_params(jax.random.PRNGKey(1), cfg)
+    assert 1e5 < param_count(p) < 2e6

@@ -1,0 +1,69 @@
+"""CHOCO compressed gossip — beyond-paper extension."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_baseline
+from repro.core.graph import weight_matrix_from_weights
+from repro.dsgd import (
+    choco_gamma,
+    choco_gossip_init,
+    choco_gossip_step,
+    identity_compressor,
+    random_k_compressor,
+    top_k_compressor,
+)
+
+
+def _W(name, n):
+    t = make_baseline(name, n)
+    return jnp.asarray(weight_matrix_from_weights(n, t.edges, t.g), jnp.float32), t
+
+
+def test_identity_choco_gamma1_equals_plain_gossip():
+    W, _ = _W("ring", 6)
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (6, 32))
+    state = choco_gossip_init(x0)
+    state = choco_gossip_step(state, W, identity_compressor(), 1.0,
+                              jax.random.PRNGKey(1))
+    # x̂ = x0 after one innovation; x ← x + (W−I)x̂ = W x0
+    np.testing.assert_allclose(np.asarray(state.x), np.asarray(W @ x0), atol=1e-5)
+
+
+def test_choco_preserves_mean():
+    W, _ = _W("exponential", 8)
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    state = choco_gossip_init(x0)
+    key = jax.random.PRNGKey(1)
+    for _ in range(30):
+        key, sub = jax.random.split(key)
+        state = choco_gossip_step(state, W, top_k_compressor(0.2), 0.3, sub)
+    np.testing.assert_allclose(np.asarray(state.x.mean(0)),
+                               np.asarray(x0.mean(0)), atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(frac=st.sampled_from([0.1, 0.25, 0.5]), seed=st.integers(0, 50))
+def test_choco_converges_with_topk(frac, seed):
+    W, topo = _W("hypercube", 8)
+    lam2 = 1.0 - float(np.sort(np.abs(np.linalg.eigvals(np.asarray(W))))[-2])
+    gamma = max(choco_gamma(topo, lam2), 0.2)
+    x0 = jax.random.normal(jax.random.PRNGKey(seed), (8, 64))
+    e0 = float(jnp.linalg.norm(x0 - x0.mean(0)))
+    state = choco_gossip_init(x0)
+    key = jax.random.PRNGKey(seed + 1)
+    for _ in range(300):
+        key, sub = jax.random.split(key)
+        state = choco_gossip_step(state, W, top_k_compressor(frac), gamma, sub)
+    e = float(jnp.linalg.norm(state.x - state.x.mean(0)))
+    assert e < 0.05 * e0, (e, e0)
+
+
+def test_random_k_is_unbiased():
+    comp = random_k_compressor(0.25)
+    x = jnp.ones((1, 4000))
+    keys = jax.random.split(jax.random.PRNGKey(0), 64)
+    mean = jnp.stack([comp.fn(x, k) for k in keys]).mean()
+    assert abs(float(mean) - 1.0) < 0.05

@@ -1,0 +1,78 @@
+"""Heterogeneous constraint builders (M, e) — §IV-B scenarios."""
+import numpy as np
+
+from repro.core.constraints import bcube_constraints, intra_server_constraints, node_level_constraints, pod_boundary_constraints
+from repro.core.graph import all_edges, edge_index
+from repro.core.topologies import exponential
+
+
+def test_node_level_matrix_is_abs_incidence():
+    """Eq. (16): M = abs(A)."""
+    from repro.core.graph import incidence_matrix
+
+    n = 6
+    cs = node_level_constraints(n, np.full(n, 3), np.full(n, 9.76))
+    A = incidence_matrix(n)
+    np.testing.assert_array_equal(cs.M, np.abs(A).astype(np.int64))
+    assert cs.equality
+
+
+def test_intra_server_exponential_maps_10_edges_to_sys():
+    """§VI-A3: the n=8 exponential graph maps exactly 10 edges onto the SYS
+    link → min edge bandwidth 9.76/10 = 0.976 GB/s."""
+    cs = intra_server_constraints()
+    t = exponential(8)
+    eidx = edge_index(8)
+    sel = np.zeros(len(all_edges(8)), dtype=bool)
+    for e in t.edges:
+        sel[eidx[e]] = True
+    usage = cs.usage(sel)
+    assert usage[6] == 10  # SYS row
+    bw = cs.edge_bandwidth(sel)
+    assert abs(min(bw[sel]) - 9.76 / 10) < 1e-9
+
+
+def test_intra_server_capacities_match_class_sizes():
+    """e = (1,1,1,1,4,4,16): each class capacity equals #possible edges."""
+    cs = intra_server_constraints()
+    class_sizes = cs.M.sum(axis=1)
+    np.testing.assert_array_equal(class_sizes, [1, 1, 1, 1, 4, 4, 16])
+    assert not cs.equality
+
+
+def test_bcube_admissibility():
+    """BCube(4,2): only one-digit-different pairs are admissible; each
+    admissible edge consumes exactly two ports at one layer."""
+    cs = bcube_constraints(4, 2)
+    edges = all_edges(16)
+    n_adm = int(cs.edge_ok.sum())
+    # per layer: 4 groups of C(4,2)=6 edges → 24; two layers → 48
+    assert n_adm == 48
+    for l, (i, j) in enumerate(edges):
+        col = cs.M[:, l]
+        if cs.edge_ok[l]:
+            assert col.sum() == 2
+        else:
+            assert col.sum() == 0
+    assert np.all(cs.e_cap == 3)
+
+
+def test_bcube_full_selection_feasible():
+    """Selecting ALL admissible edges saturates every port at exactly p−1."""
+    cs = bcube_constraints(4, 2)
+    z = cs.edge_ok.astype(np.int64)
+    usage = cs.usage(z)
+    np.testing.assert_array_equal(usage, np.full(32, 3))
+    assert cs.feasible(z)
+
+
+def test_pod_boundary():
+    cs = pod_boundary_constraints(8, pods=2, dci_cap_total=3)
+    edges = all_edges(8)
+    # cross-pod edges hit the aggregate DCI row
+    cross = [l for l, (i, j) in enumerate(edges) if (i < 4) != (j < 4)]
+    assert all(cs.M[8, l] == 1 for l in cross)
+    z = np.zeros(len(edges), dtype=np.int64)
+    for l in cross[:4]:
+        z[l] = 1
+    assert not cs.feasible(z)  # 4 > dci_cap_total=3

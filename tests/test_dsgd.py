@@ -1,0 +1,148 @@
+"""DSGD runtime: schedule decomposition, gossip equivalence, training steps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced_for_smoke
+from repro.core import make_baseline, optimize_topology, BATopoConfig
+from repro.core.admm import ADMMConfig
+from repro.core.graph import Topology, weight_matrix_from_weights
+from repro.data import DataConfig, synthetic_lm_batch
+from repro.dsgd import (
+    allreduce_train_step,
+    bytes_per_sync,
+    dsgd_train_step,
+    gossip_sim,
+    gossip_sim_tree,
+    init_dsgd_state,
+    reconstruct_weight_matrix,
+    schedule_from_topology,
+)
+from repro.dsgd.schedule import _edge_color
+from repro.optim import sgd_momentum
+
+
+def _random_topology(n: int, extra: int, seed: int) -> Topology:
+    """Random connected graph: spanning tree + ``extra`` chords."""
+    rng = np.random.default_rng(seed)
+    edges = set()
+    order = rng.permutation(n)
+    for a, b in zip(order[:-1], order[1:]):
+        edges.add((min(a, b), max(a, b)))
+    while len(edges) < min(n - 1 + extra, n * (n - 1) // 2):
+        i, j = rng.integers(0, n, 2)
+        if i != j:
+            edges.add((min(i, j), max(i, j)))
+    edges = sorted(edges)
+    from repro.core.weights import metropolis_weights
+    g = metropolis_weights(n, edges)
+    return Topology(n, edges, g, name=f"rand{n}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 24), extra=st.integers(0, 20), seed=st.integers(0, 10_000))
+def test_schedule_reconstructs_W_property(n, extra, seed):
+    """Property: matching-round decomposition is exact for ANY connected
+    weighted topology (the gossip runtime's core invariant)."""
+    topo = _random_topology(n, extra, seed)
+    sched = schedule_from_topology(topo)
+    W = weight_matrix_from_weights(n, topo.edges, topo.g)
+    np.testing.assert_allclose(reconstruct_weight_matrix(sched), W, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 24), extra=st.integers(0, 20), seed=st.integers(0, 10_000))
+def test_edge_coloring_is_proper_matching(n, extra, seed):
+    topo = _random_topology(n, extra, seed)
+    matchings = _edge_color(n, list(topo.edges))
+    seen = set()
+    for matching in matchings:
+        nodes = [x for e in matching for x in e]
+        assert len(nodes) == len(set(nodes)), "round is not a matching"
+        seen.update(map(tuple, matching))
+    assert seen == set(map(tuple, topo.edges))
+    deg = sched_deg = np.zeros(n, int)
+    for i, j in topo.edges:
+        deg[i] += 1
+        deg[j] += 1
+    assert len(matchings) <= 2 * deg.max() - 1  # greedy coloring bound
+
+
+def test_gossip_sim_matches_matmul():
+    topo = make_baseline("exponential", 8)
+    W = jnp.asarray(weight_matrix_from_weights(8, topo.edges, topo.g), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 5, 3))
+    out = gossip_sim(x, W)
+    expect = jnp.einsum("ij,jkl->ikl", W, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_gossip_kernel_path_matches_plain():
+    topo = make_baseline("ring", 6)
+    W = jnp.asarray(weight_matrix_from_weights(6, topo.edges, topo.g), jnp.float32)
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (6, 130)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (6, 4, 7))}
+    plain = gossip_sim_tree(tree, W, use_kernel=False)
+    kern = gossip_sim_tree(tree, W, use_kernel=True)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(plain[k]), np.asarray(kern[k]),
+                                   atol=1e-5)
+
+
+def test_bytes_per_sync_sparser_than_allreduce():
+    topo = optimize_topology(8, 12, "homo",
+                             cfg=BATopoConfig(sa_iters=150,
+                                              admm=ADMMConfig(max_iters=40)))
+    sched = schedule_from_topology(topo)
+    t = bytes_per_sync(sched, param_bytes=10**6)
+    assert t["total"] == 2 * len(topo.edges) * 10**6
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = reduced_for_smoke(get_arch("smollm-135m"))
+    n = 4
+    topo = make_baseline("ring", n)
+    opt_init, opt_update = sgd_momentum(0.05)
+    state = init_dsgd_state(jax.random.PRNGKey(0), cfg, n, opt_init)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, batch_size=2)
+    per = [synthetic_lm_batch(dc, 0, node=i) for i in range(n)]
+    batch = {k: jnp.stack([b[k] for b in per]) for k in per[0]}
+    return cfg, n, topo, opt_init, opt_update, state, batch
+
+
+def test_dsgd_step_decreases_loss_and_keeps_consensus(smoke_setup):
+    cfg, n, topo, opt_init, opt_update, state, batch = smoke_setup
+    step = dsgd_train_step(cfg, topo, opt_update)
+    losses = []
+    st = state
+    for _ in range(4):
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0]
+    assert float(m["consensus_err"]) < 1.0  # bounded by gossip
+
+
+def test_allreduce_keeps_workers_identical(smoke_setup):
+    cfg, n, topo, opt_init, opt_update, state, batch = smoke_setup
+    step = allreduce_train_step(cfg, n, opt_update)
+    st, m = step(state, batch)
+    assert float(m["consensus_err"]) < 1e-3
+
+
+def test_dsgd_matches_allreduce_on_complete_graph(smoke_setup):
+    """Gossip with W = 11ᵀ/n IS all-reduce — the two step builders must agree."""
+    cfg, n, _, opt_init, opt_update, state, batch = smoke_setup
+    from repro.core.graph import all_edges
+    edges = all_edges(n)
+    g = np.full(len(edges), 1.0 / n)
+    complete = Topology(n, edges, g, name="complete")
+    s1, _ = dsgd_train_step(cfg, complete, opt_update)(state, batch)
+    s2, _ = allreduce_train_step(cfg, n, opt_update)(state, batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-5)

@@ -1,0 +1,44 @@
+"""Time-varying (round-robin matching) gossip — beyond-paper extension."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_baseline
+from repro.core.graph import weight_matrix_from_weights
+from repro.dsgd.dynamic import (
+    cycle_contraction,
+    cycle_weight_matrices,
+    round_robin_schedules,
+)
+from tests.test_dsgd import _random_topology
+
+
+def test_each_round_is_doubly_stochastic_psd():
+    topo = make_baseline("exponential", 8)
+    for W in cycle_weight_matrices(round_robin_schedules(topo)):
+        np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+        np.testing.assert_allclose(W, W.T, atol=1e-12)
+        ev = np.linalg.eigvalsh(W)
+        assert ev.min() >= -1e-12  # lazy pairwise averages are PSD
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 16), extra=st.integers(0, 10), seed=st.integers(0, 1000))
+def test_cycle_contracts_for_connected_graphs(n, extra, seed):
+    topo = _random_topology(n, extra, seed)
+    scheds = round_robin_schedules(topo)
+    rho = cycle_contraction(scheds)
+    assert rho < 1.0 - 1e-9  # connected ⇒ one cycle strictly contracts
+    # covering property: every edge appears in exactly one round
+    counted = sorted(e for s in scheds for p in s.perms for e in p if e[0] < e[1])
+    assert counted == sorted(map(tuple, topo.edges))
+
+
+def test_cycle_preserves_mean():
+    topo = make_baseline("ring", 6)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(6, 4))
+    for W in cycle_weight_matrices(round_robin_schedules(topo)):
+        x2 = W @ x
+        np.testing.assert_allclose(x2.mean(0), x.mean(0), atol=1e-12)
+        x = x2

@@ -1,0 +1,91 @@
+"""Graph primitive invariants (Eqs. 3, 5–7) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (
+    Topology, all_edges, aspl, incidence_matrix, is_connected,
+    laplacian_from_weights, r_asym, weight_matrix_from_weights,
+)
+
+
+def test_all_edges_count():
+    for n in (2, 5, 16):
+        assert len(all_edges(n)) == n * (n - 1) // 2
+
+
+def test_incidence_laplacian_consistency():
+    n = 6
+    edges = all_edges(n)
+    rng = np.random.default_rng(0)
+    g = rng.uniform(0, 0.3, len(edges))
+    A = incidence_matrix(n, edges)
+    L_explicit = A @ np.diag(g) @ A.T  # Eq. (5)
+    L_fast = laplacian_from_weights(n, edges, g)
+    np.testing.assert_allclose(L_explicit, L_fast, atol=1e-12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(3, 10), st.integers(0, 10_000))
+def test_weight_matrix_doubly_stochastic(n, seed):
+    """W = I − A Diag(g) Aᵀ is symmetric & doubly stochastic for any g (§IV-A)."""
+    rng = np.random.default_rng(seed)
+    edges = all_edges(n)
+    g = rng.uniform(0, 1.0 / n, len(edges))
+    W = weight_matrix_from_weights(n, edges, g)
+    ones = np.ones(n)
+    np.testing.assert_allclose(W @ ones, ones, atol=1e-10)
+    np.testing.assert_allclose(ones @ W, ones, atol=1e-10)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 8), st.integers(0, 10_000))
+def test_laplacian_eigenvalue_bounds(n, seed):
+    """Eq. (7): 0 = λ_n(L) and, when diag(L) ≤ 1, λ_1(L) < 2."""
+    rng = np.random.default_rng(seed)
+    edges = all_edges(n)
+    g = rng.uniform(0, 1.0, len(edges))
+    L = laplacian_from_weights(n, edges, g)
+    # normalize to diag(L) ≤ 1 as enforced by Eq. (9)'s last constraint
+    scale = max(np.max(np.diag(L)), 1.0)
+    L = L / scale
+    ev = np.linalg.eigvalsh(L)
+    assert abs(ev[0]) < 1e-9
+    assert ev[-1] < 2.0 + 1e-9
+
+
+def test_r_asym_complete_graph():
+    """Complete graph with uniform weights 1/n reaches consensus in one step."""
+    n = 8
+    edges = all_edges(n)
+    g = np.full(len(edges), 1.0 / n)
+    W = weight_matrix_from_weights(n, edges, g)
+    assert r_asym(W) < 1e-10
+
+
+def test_r_asym_known_ring4():
+    # 4-ring with uniform weight 1/3: W eigenvalues {1, 1/3, 1/3, -1/3}
+    n = 4
+    edges = [(0, 1), (1, 2), (2, 3), (0, 3)]
+    g = np.full(4, 1.0 / 3.0)
+    W = weight_matrix_from_weights(n, edges, g)
+    assert abs(r_asym(W) - 1.0 / 3.0) < 1e-12
+
+
+def test_aspl_ring_and_connectivity():
+    n = 6
+    ring_edges = [(i, (i + 1) % n) for i in range(n)]
+    ring_edges = [(min(a, b), max(a, b)) for a, b in ring_edges]
+    # ring ASPL for n=6: distances 1,2,3,2,1 → mean 1.8
+    assert abs(aspl(n, ring_edges) - 1.8) < 1e-12
+    assert is_connected(n, ring_edges)
+    assert not is_connected(n, ring_edges[:-2])
+    assert aspl(n, ring_edges[:-2]) == float("inf")
+
+
+def test_topology_validate_rejects_bad():
+    n = 4
+    t = Topology(n, [(0, 1), (2, 3)], np.array([0.5, 0.5]), name="disconnected")
+    with pytest.raises(AssertionError):
+        t.validate()  # r_asym == 1 for disconnected graphs

@@ -1,0 +1,124 @@
+"""Per-kernel validation vs the pure-jnp oracles (brief requirement):
+sweep shapes/dtypes, assert_allclose against ref.py, in interpret mode."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+
+# --- gossip_mix -------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128,), (1024,), (2048, 64), (257,), (1000, 131),
+                                   (3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_mix_shapes_dtypes(shape, dtype):
+    from repro.kernels.gossip_mix import ops, ref
+    deg = 3
+    x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    nbrs = jax.random.normal(jax.random.PRNGKey(1), (deg,) + shape).astype(dtype)
+    w = jnp.asarray([0.4, 0.2, 0.2, 0.2], jnp.float32)
+    out = ops.gossip_mix(x, nbrs, w, use_kernel=True)
+    expect = ref.gossip_mix(x, nbrs, w)
+    assert out.shape == shape and out.dtype == x.dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 3000), deg=st.integers(1, 5), seed=st.integers(0, 99))
+def test_gossip_mix_property_any_length(n, deg, seed):
+    from repro.kernels.gossip_mix import ops, ref
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n,))
+    nbrs = jax.random.normal(jax.random.PRNGKey(seed + 1), (deg, n))
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 2), (deg + 1,)))
+    w = w / w.sum()
+    np.testing.assert_allclose(np.asarray(ops.gossip_mix(x, nbrs, w)),
+                               np.asarray(ref.gossip_mix(x, nbrs, w)), atol=1e-5)
+
+
+def test_gossip_mix_is_convex_combination():
+    """Property: with convex weights, output stays in the convex hull."""
+    from repro.kernels.gossip_mix import ops
+    x = jnp.full((256,), 2.0)
+    nbrs = jnp.stack([jnp.full((256,), 1.0), jnp.full((256,), 3.0)])
+    w = jnp.asarray([0.5, 0.25, 0.25])
+    out = ops.gossip_mix(x, nbrs, w)
+    assert float(out.min()) >= 1.0 - 1e-5 and float(out.max()) <= 3.0 + 1e-5
+
+
+# --- decode_attention --------------------------------------------------------
+
+@pytest.mark.parametrize("B,C,Hkv,g,hd", [(1, 128, 1, 1, 64), (2, 512, 2, 2, 64),
+                                          (4, 1024, 4, 1, 128), (2, 384, 3, 3, 64)])
+def test_decode_attention_shapes(B, C, Hkv, g, hd):
+    from repro.kernels.decode_attention import ops, ref
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, Hkv * g, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, C, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, C, Hkv, hd))
+    valid = jnp.arange(C) < (2 * C // 3)
+    out = ops.decode_attention(q, k, v, valid)
+    expect = ref.decode_attention(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_softcap_and_masks():
+    from repro.kernels.decode_attention import ops, ref
+    B, C, Hkv, g, hd = 2, 256, 2, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, Hkv * g, hd)) * 3
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, C, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, C, Hkv, hd))
+    for frac in (1, 4, C):  # single valid slot up to fully valid
+        valid = jnp.arange(C) < frac
+        out = ops.decode_attention(q, k, v, valid, attn_softcap=50.0)
+        expect = ref.decode_attention(q, k, v, valid, attn_softcap=50.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# --- ssd_scan ----------------------------------------------------------------
+
+@pytest.mark.parametrize("B,nc,Q,H,P,N", [(1, 1, 64, 2, 32, 16),
+                                          (2, 2, 64, 4, 32, 32),
+                                          (1, 4, 128, 8, 64, 64)])
+def test_ssd_intra_chunk_shapes(B, nc, Q, H, P, N):
+    from repro.kernels.ssd_scan import ops, ref
+    k = jax.random.PRNGKey(0)
+    xc = jax.random.normal(k, (B, nc, Q, H, P)) * 0.3
+    dtc = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, nc, Q, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.3)
+    la = jnp.cumsum(A[None, None, None, :] * dtc, axis=2)
+    Bc = jax.random.normal(jax.random.PRNGKey(3), (B, nc, Q, N)) * 0.3
+    Cc = jax.random.normal(jax.random.PRNGKey(4), (B, nc, Q, N)) * 0.3
+    yk, sk = ops.ssd_intra_chunk(xc, dtc, la, Bc, Cc)
+    yr, sr = ref.ssd_intra_chunk(xc, dtc, la, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), atol=5e-5, rtol=5e-5)
+
+
+def test_ssd_scan_matches_sequential_recurrence():
+    """The chunked dual form must equal the plain SSM recurrence."""
+    from repro.models.ssm import ssd_chunk_scan
+    B, S, H, P, N = 1, 64, 2, 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.2)
+    Bm = jax.random.normal(jax.random.PRNGKey(3), (B, S, N)) * 0.5
+    Cm = jax.random.normal(jax.random.PRNGKey(4), (B, S, N)) * 0.5
+    y, hT = ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=16)
+
+    # sequential oracle
+    h = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        dec = np.exp(np.asarray(A)[None] * np.asarray(dt[:, t]))  # (B,H)
+        h = dec[:, :, None, None] * h + np.einsum(
+            "bh,bn,bhp->bhpn", np.asarray(dt[:, t]), np.asarray(Bm[:, t]),
+            np.asarray(x[:, t]))
+        ys.append(np.einsum("bn,bhpn->bhp", np.asarray(Cm[:, t]), h))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), h, atol=1e-3, rtol=1e-3)

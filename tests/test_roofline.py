@@ -1,0 +1,116 @@
+"""Roofline analysis: HLO collective parser + trip-count correction."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.roofline import collective_bytes_from_hlo, model_flops
+from repro.roofline.analysis import _multipliers, _parse_computations, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[2,3]{1,0}") == 24
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[4], s32[2])") == 24
+    assert _shape_bytes("pred[8]") == 8
+    assert _shape_bytes("f32[]") == 4
+
+
+SYNTH = """
+HloModule m
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %x = f32[64]{0} get-tuple-element(%p), index=1
+  %ar = f32[64]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[64]) tuple(%x, %ar)
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]) parameter(0)
+  ROOT %lt = pred[] compare(%p, %p), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64]{0} parameter(0)
+  %big = f32[128]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[64]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parser_trip_count_multiplier():
+    res = collective_bytes_from_hlo(SYNTH)
+    # all-gather once: 128*4 = 512; all-reduce in body ×5: 5*256 = 1280
+    assert res["by_op"]["all-gather"] == 512
+    assert res["by_op"]["all-reduce"] == 1280
+    assert res["total"] == 512 + 1280
+
+
+def test_multipliers_nested():
+    comps = _parse_computations(SYNTH)
+    assert set(comps) >= {"body", "cond", "main"}
+    mult = _multipliers(comps)
+    assert mult["main"] == 1.0
+    assert mult["body"] == 5.0
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >1 device")
+def test_parser_matches_unrolled():
+    pass  # exercised by test_sharded_runtime.py in a multi-device subprocess
+
+
+def test_parser_on_real_compiled_module():
+    """Scan body collectives must be multiplied by the trip count: compare a
+    scanned loop against its unrolled twin on a single device (all-reduce
+    appears only with >1 device, so use a gather-free psum-of-shard trick:
+    just validate parser runs and finds zero collectives single-device)."""
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ x), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out.sum()
+
+    x = jnp.ones((16, 16))
+    txt = jax.jit(f).lower(x).compile().as_text()
+    res = collective_bytes_from_hlo(txt)
+    assert res["total"] == 0.0 and res["count"] == 0
+
+
+def test_model_flops():
+    class Cfg:
+        num_experts = 0
+    assert model_flops(Cfg(), 10, "train", 100) == 6000
+    assert model_flops(Cfg(), 10, "decode", 100) == 2000
+    assert model_flops(Cfg(), 10, "prefill", 100, active_param_count=50) == 1000
+
+
+def test_analytic_flops_vs_hlo_single_layer():
+    """Cross-validate the analytic compute term against XLA's own count on a
+    1-layer model (while-trip = 1, so cost_analysis has no body-once bias).
+    The analytic 2·N·D form counts the embedding gather and full-seq lm-head
+    as matmuls, so it over-estimates on tiny-vocab reduced configs; assert
+    the ratio stays within the roofline-estimate envelope."""
+    from dataclasses import replace
+    from repro.configs import get_arch, reduced_for_smoke
+    from repro.configs.base import InputShape
+    from repro.models import transformer
+    from repro.roofline.analysis import analytic_flops_bytes
+
+    cfg = replace(reduced_for_smoke(get_arch("smollm-135m")), num_layers=1)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 4, 256
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+    compiled = jax.jit(
+        lambda p, b: transformer.prefill(p, cfg, b, cache_cap=S)).lower(
+        params, batch).compile()
+    hlo_flops = compiled.cost_analysis()["flops"]
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    a = analytic_flops_bytes(
+        cfg, InputShape("probe", S, B, "prefill"), "prefill",
+        {"params": n, "active": n, "param_bytes": 4 * n, "cache_bytes": 0})
+    ratio = a["flops"] / hlo_flops
+    assert 0.7 < ratio < 1.6, ratio

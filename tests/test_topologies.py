@@ -1,0 +1,62 @@
+"""Benchmark-topology checks against the paper's reported spectral factors."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.topologies import exponential, grid2d, hypercube, make_baseline, random_graph, ring, torus2d, u_equistatic
+
+
+@pytest.mark.parametrize("kind", ["ring", "grid", "torus", "hypercube", "exponential", "equistatic"])
+def test_baselines_valid(kind):
+    t = make_baseline(kind, 16)
+    t.validate()
+    assert t.r_asym() < 1.0
+
+
+@pytest.mark.parametrize("n,expected", [(4, 1 / 3), (8, 0.5), (16, 0.6), (32, 2 / 3), (64, 5 / 7), (128, 0.75)])
+def test_exponential_matches_paper_table1(n, expected):
+    """Table I row 'exponential': 1 − 2/(log2(n) + 2)."""
+    t = exponential(n)
+    assert abs(t.r_asym() - expected) < 5e-3
+
+
+def test_exponential_degree():
+    t = exponential(16)
+    assert t.meta["out_degree"] == 4  # log2(16)
+
+
+def test_hypercube_factor():
+    # W = (I + sum_dims)/ (k+1): second eigenvalue (k−1)/(k+1)
+    for n in (8, 16, 32):
+        k = int(math.log2(n))
+        t = hypercube(n)
+        assert abs(t.r_asym() - (k - 1) / (k + 1)) < 1e-9
+
+
+def test_torus_structure():
+    t = torus2d(16)
+    assert t.r == 32
+    assert t.max_degree == 4
+
+
+def test_grid_structure():
+    t = grid2d(16)
+    assert t.r == 24
+
+
+def test_ring_scaling():
+    # ring consensus degrades with n (paper §I motivation)
+    assert ring(32).r_asym() > ring(8).r_asym()
+
+
+def test_u_equistatic_edge_budget():
+    t = u_equistatic(16, M=2, trials=16)
+    assert t.r <= 32
+    t.validate()
+
+
+def test_random_graph_connected():
+    t = random_graph(12, 18, seed=3)
+    t.validate()
+    assert t.r == 18
