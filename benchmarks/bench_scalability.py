@@ -20,7 +20,8 @@ from repro.core.consensus import simulate_consensus, time_to_error
 from .common import ba_topo, edge_b_min
 
 
-def run(nodes: list[int], iters: int, sa_iters: int, seed: int) -> list[dict]:
+def run(nodes: list[int], iters: int, sa_iters: int, seed: int,
+        restarts: int = 1) -> list[dict]:
     rows = []
     for n in nodes:
         expo = make_baseline("exponential", n)
@@ -32,7 +33,9 @@ def run(nodes: list[int], iters: int, sa_iters: int, seed: int) -> list[dict]:
         except Exception:
             equi = None
         t0 = time.time()
-        ba = ba_topo(n, r_budget, "homo", seed=seed, sa_iters=sa_iters)
+        # restarts > 1 run as ONE batched, vmapped ADMM device call
+        ba = ba_topo(n, r_budget, "homo", seed=seed, sa_iters=sa_iters,
+                     restarts=restarts)
         solve_s = time.time() - t0
         for topo, label in [(expo, "exponential"), (equi, "u-equistatic"),
                             (ba, "ba-topo")]:
@@ -55,13 +58,15 @@ def main(argv=None) -> None:
     ap.add_argument("--nodes", default="4,8,16,32,64")
     ap.add_argument("--iters", type=int, default=600)
     ap.add_argument("--sa-iters", type=int, default=600)
+    ap.add_argument("--restarts", type=int, default=1,
+                    help="ADMM restarts, solved batched on device when > 1")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
     nodes = [int(x) for x in args.nodes.split(",")]
 
     print("== scalability (paper Table I) ==")
-    rows = run(nodes, args.iters, args.sa_iters, args.seed)
+    rows = run(nodes, args.iters, args.sa_iters, args.seed, args.restarts)
     print(f"{'n':>5} {'topology':>14} {'edges':>6} {'r_asym':>7} {'t_conv_ms':>10}")
     for r in rows:
         print(f"{r['n']:>5} {r['topology']:>14} {r['edges']:>6} "

@@ -60,8 +60,8 @@ def edge_b_min(topo: Topology, scenario: str, node_bw: np.ndarray | None = None,
 
 
 def ba_topo(n: int, r: int, scenario: str = "homo", *, node_bw=None, cs=None,
-            seed: int = 0, sa_iters: int = 800) -> Topology:
-    cfg = BATopoConfig(seed=seed, sa_iters=sa_iters)
+            seed: int = 0, sa_iters: int = 800, restarts: int = 1) -> Topology:
+    cfg = BATopoConfig(seed=seed, sa_iters=sa_iters, restarts=restarts)
     if scenario == "homo":
         return optimize_topology(n, r, "homo", cfg=cfg)
     if scenario == "node":

@@ -3,7 +3,7 @@
   1. node-level heterogeneity 3:…:1 (Fig. 2) via Algorithm 1 + hetero ADMM,
   2. intra-server PIX/NODE/SYS tree (Fig. 4),
   3. inter-server BCube(4,2) switch ports (Fig. 6),
-  4. our TPU adaptation: 2-pod boundary constraints (DESIGN.md §3).
+  4. our TPU adaptation: 2-pod boundary constraints (DESIGN.md §7).
 
     PYTHONPATH=src python examples/heterogeneous_bcube.py
 """
@@ -58,7 +58,7 @@ tr = simulate_consensus(topo, iters=300, b_min=b_min_of(topo, cs))
 print(f"  BA-Topo: edges={len(topo.edges)} r_asym={topo.r_asym():.3f} "
       f"t(err≤1e-4)={time_to_error(tr):.0f}ms")
 
-print("\n=== 4. TPU 2-pod boundary (DESIGN.md §3 adaptation), n=32 ===")
+print("\n=== 4. TPU 2-pod boundary (DESIGN.md §7 adaptation), n=32 ===")
 cs = pod_boundary_constraints(32, pods=2, dci_cap_total=4)
 topo = optimize_topology(32, 64, "constraint", cs=cs, cfg=CFG)
 cross = sum(1 for i, j in topo.edges if (i < 16) != (j < 16))

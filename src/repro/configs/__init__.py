@@ -18,7 +18,7 @@ ARCHS: dict[str, ModelConfig] = {
     ]
 }
 
-# long_500k requires sub-quadratic attention (see DESIGN.md §5): run it for
+# long_500k requires sub-quadratic attention (see DESIGN.md §8): run it for
 # SSM/hybrid and for SWA-capable archs; skip pure full-attention archs.
 LONG_CONTEXT_ARCHS = {"mamba2-780m", "zamba2-2.7b", "gemma2-9b", "mixtral-8x22b"}
 
@@ -28,7 +28,7 @@ def get_arch(name: str) -> ModelConfig:
     return ARCHS[name]
 
 def shape_supported(arch: str, shape: str) -> bool:
-    """Whether (arch × input-shape) is in the supported matrix (DESIGN.md §5)."""
+    """Whether (arch × input-shape) is in the supported matrix (DESIGN.md §8)."""
     if shape == "long_500k":
         return arch in LONG_CONTEXT_ARCHS
     return True

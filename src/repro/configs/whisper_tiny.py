@@ -1,7 +1,7 @@
 """Whisper tiny [arXiv:2212.04356] — encoder-decoder audio backbone; the
 mel-spectrogram + conv frontend is a STUB per the brief: input_specs provides
 1500 precomputed frame embeddings. Decoder positions use RoPE (repro liberty,
-see DESIGN.md §5)."""
+see DESIGN.md §8)."""
 from .base import ModelConfig
 
 CONFIG = ModelConfig(

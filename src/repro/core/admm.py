@@ -1,320 +1,135 @@
-"""Algorithm 2 — ADMM framework for the network-topology optimization problems.
+"""Algorithm 2 — ADMM solvers for the network-topology optimization problems.
 
-Solves the homogeneous problem (Eq. 20) and the heterogeneous Mixed-Integer
-SDP (Eq. 28). Splitting, projections, X-step KKT system and dual updates
-follow §V of the paper exactly; the X-step linear system is dispatched to one
-of the backends in ``linalg.py``.
+Thin object-oriented wrappers over the functional solver engine in
+``engine.py``: each class builds a :class:`~repro.core.engine.ProblemSpec`
+once and delegates to the shared ``step``/driver functions. The splitting,
+projections, X-step KKT system and dual updates follow §V of the paper
+exactly; the X-step linear system is dispatched to one of the backends in
+``linalg.py`` (see DESIGN.md §3).
 
-Variable layout (homogeneous, Eq. 20):
-  X = (x, S, y, T)     with x = [g; λ̃] ∈ R^{m+1}
-  Y = (x₁, S₁, y₁, T₁)
-  duals D = (μ, Λ, σ, Γ)
-Constraints C_X (Eq. 23):
-  L(g) − λ̃I + S = −B₀,   L(g) + λ̃I + T = 2I,   diag(L(g)) + y = 1
-Heterogeneous adds (z, ν[, s]) with M z (+ s) = e and g − z + ν = 0.
+Drivers (``ADMMConfig.driver``):
+  - ``"scan"``   (default) — device-resident chunked ``lax.scan`` loop,
+    convergence checked on-device every ``check_every`` iterations.
+  - ``"python"`` — the seed per-iteration host loop (one sync per
+    iteration); also the carrier for the scipy-ILU backend.
+
+``solve_batched`` vmaps the scan driver over a batch of warm starts so
+restarts share one compiled device call.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import replace
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import all_edges
-from .linalg import ILUKKTSolver, kkt_bicgstab_solve, schur_cg_solve
-
-jax.config.update("jax_enable_x64", True)
+from .engine import (
+    ADMMConfig,
+    ADMMResult,
+    ADMMState,
+    ProblemSpec,
+    init_state,
+    make_hetero_spec,
+    make_homo_spec,
+    make_ilu_step,
+    proj_binary_topr,
+    proj_card_nonneg,
+    proj_psd,
+    solve_batched_spec,
+    solve_python,
+    solve_spec,
+)
 
 __all__ = ["ADMMConfig", "ADMMResult", "HomogeneousADMM", "HeterogeneousADMM"]
 
-
-@dataclass
-class ADMMConfig:
-    rho: float = 5.0  # tuned on n=16, r=32: see EXPERIMENTS.md (ρ=5 → 0.517 vs paper 0.52)
-    alpha: float = 2.0  # Lemma 1 shift; any α ≥ λ_{n−1}(L) works, and λ < 2 always (Eq. 7)
-    max_iters: int = 1500
-    eps: float = 1e-7  # threshold on the summed squared primal residual (Alg. 2 line 4)
-    solver: str = "schur_cg"  # schur_cg | kkt_bicgstab | kkt_bicgstab_ilu
-    cg_tol: float = 1e-11
-    cg_maxiter: int = 3000
-    check_every: int = 10
-    verbose: bool = False
+# Backwards-compatible aliases (pre-engine private names).
+_proj_psd = proj_psd
+_proj_card_nonneg = proj_card_nonneg
+_proj_binary_topr = proj_binary_topr
 
 
-@dataclass
-class ADMMResult:
-    g: np.ndarray          # edge weights (candidate-edge order), from x₁
-    g_raw: np.ndarray      # from x (pre-projection side)
-    lam_tilde: float
-    z: np.ndarray | None   # binary edge selection (hetero only)
-    iters: int
-    residual: float
-    history: list = field(default_factory=list)
+class _ADMMBase:
+    """Shared driver dispatch for both scenarios."""
+
+    spec: ProblemSpec
+    cfg: ADMMConfig
+
+    @property
+    def m(self) -> int:
+        return self.spec.m
+
+    @property
+    def r(self) -> int:
+        return int(self.spec.r)
+
+    def _device_cfg(self) -> ADMMConfig:
+        """Config with a device backend. The scipy-ILU backend exists only
+        for the homogeneous problem; like the seed, the heterogeneous
+        solver falls back to schur_cg when it is requested."""
+        if self.cfg.driver not in ("scan", "python"):
+            raise ValueError(
+                f"unknown driver {self.cfg.driver!r}; expected 'scan' or 'python'")
+        if self.spec.hetero and self.cfg.solver == "kkt_bicgstab_ilu":
+            return replace(self.cfg, solver="schur_cg")
+        return self.cfg
+
+    def _solve_state(self, state: ADMMState) -> ADMMResult:
+        cfg = self._device_cfg()
+        if cfg.solver == "kkt_bicgstab_ilu":
+            return solve_python(self.spec, state, cfg, step_fn=self._ilu_step())
+        if cfg.driver == "python":
+            return solve_python(self.spec, state, cfg)
+        return solve_spec(self.spec, state, cfg)
+
+    def _batched_cfg(self) -> ADMMConfig:
+        """Validated config for solve_batched (always the scan driver)."""
+        cfg = self._device_cfg()
+        if cfg.solver == "kkt_bicgstab_ilu":
+            raise ValueError(
+                "solve_batched needs a device backend (schur_cg or "
+                "kkt_bicgstab); the scipy-ILU backend is host-side")
+        return cfg
+
+    def _ilu_step(self):
+        raise ValueError("the ILU backend supports the homogeneous problem only")
 
 
-def _proj_psd(M: jnp.ndarray, sign: float) -> jnp.ndarray:
-    """Eq. 25: eigenvalue clipping. sign=+1 → PSD (T₁ ≽ 0), −1 → NSD (S₁ ≼ 0)."""
-    Msym = (M + M.T) / 2.0
-    ev, U = jnp.linalg.eigh(Msym)
-    ev = jnp.maximum(ev, 0.0) if sign > 0 else jnp.minimum(ev, 0.0)
-    return (U * ev) @ U.T
-
-
-def _proj_card_nonneg(v: jnp.ndarray, r: int, ok: jnp.ndarray) -> jnp.ndarray:
-    """Project onto {g ≥ 0, Card(g) ≤ r} ∩ {g_l = 0 for inadmissible l}.
-
-    Keep the largest r nonnegative entries (Eq. 24 discussion), zero the rest.
-    """
-    v = jnp.where(ok, jnp.maximum(v, 0.0), 0.0)
-    m = v.shape[0]
-    if r >= m:
-        return v
-    thresh = jax.lax.top_k(v, r + 1)[0][r]  # (r+1)-th largest
-    keep = v > jnp.maximum(thresh, 0.0)
-    # tie-break: if fewer than r kept due to exact ties/zeros that is fine
-    return jnp.where(keep, v, 0.0)
-
-
-def _proj_binary_topr(v: jnp.ndarray, r: int, ok: jnp.ndarray) -> jnp.ndarray:
-    """Heterogeneous z₁ projection: largest r entries → 1, others → 0 (§V-B)."""
-    v = jnp.where(ok, v, -jnp.inf)
-    m = v.shape[0]
-    idx = jax.lax.top_k(v, r)[1]
-    z = jnp.zeros(m, dtype=v.dtype).at[idx].set(1.0)
-    return z
-
-
-class _TopoOperators:
-    """Shared edge-indexed operators: L(g), A, Aᵀ (matrix-free)."""
-
-    def __init__(self, n: int, alpha: float):
-        self.n = n
-        self.edges = all_edges(n)
-        self.m = len(self.edges)
-        self.ei = jnp.array([i for i, _ in self.edges])
-        self.ej = jnp.array([j for _, j in self.edges])
-        self.alpha = alpha
-        self.B0 = alpha * jnp.ones((n, n)) / n
-        self.I = jnp.eye(n)
-
-    def L_of_g(self, g: jnp.ndarray) -> jnp.ndarray:
-        n, ei, ej = self.n, self.ei, self.ej
-        L = jnp.zeros((n, n), dtype=g.dtype)
-        L = L.at[ei, ej].add(-g).at[ej, ei].add(-g)
-        L = L.at[ei, ei].add(g).at[ej, ej].add(g)
-        return L
-
-    def edge_quadform(self, P: jnp.ndarray) -> jnp.ndarray:
-        """⟨∂L/∂g_l, P⟩ = P_ii + P_jj − P_ij − P_ji per edge l = {i, j}."""
-        ei, ej = self.ei, self.ej
-        return P[ei, ei] + P[ej, ej] - P[ei, ej] - P[ej, ei]
-
-    def deg_sum(self, w: jnp.ndarray) -> jnp.ndarray:
-        """(Dᵀ w)_l = w_i + w_j."""
-        return w[self.ei] + w[self.ej]
-
-
-class HomogeneousADMM:
+class HomogeneousADMM(_ADMMBase):
     """Eq. (20) solver. ``r`` is the cardinality budget on the edge set."""
 
     def __init__(self, n: int, r: int, cfg: ADMMConfig = ADMMConfig(),
                  edge_ok: np.ndarray | None = None):
         self.n, self.cfg = n, cfg
-        self.ops = _TopoOperators(n, cfg.alpha)
-        m = self.ops.m
-        self.edge_ok = jnp.ones(m, dtype=bool) if edge_ok is None else jnp.asarray(edge_ok)
-        self.r = min(r, int(np.asarray(self.edge_ok).sum()))
-        # objective coefficient c: minimize −λ̃  (Eq. 9 → Eq. 20)
-        self.c = jnp.zeros(m + 1).at[m].set(-1.0)
-        self._step = jax.jit(self._step_impl)
-        self._ilu: ILUKKTSolver | None = None
+        self.spec = make_homo_spec(n, r, cfg, edge_ok)
+        self._ilu_step_fn = None
 
-    # ---- matrix-free constraint operator and its adjoint -------------------
-    def A_op(self, X):
-        x, S, y, T = X
-        g, lam = x[:-1], x[-1]
-        L = self.ops.L_of_g(g)
-        I = self.ops.I
-        return (L - lam * I + S, L + lam * I + T, jnp.diag(L) + y)
-
-    def AT_op(self, lamv):
-        P, Q, w = lamv
-        xg = self.ops.edge_quadform(P + Q) + self.ops.deg_sum(w)
-        xl = -jnp.trace(P) + jnp.trace(Q)
-        x_adj = jnp.concatenate([xg, xl[None]])
-        return (x_adj, P, w, Q)
-
-    def b_rhs(self):
-        n, I = self.n, self.ops.I
-        return (-self.ops.B0, 2.0 * I, jnp.ones(n))
-
-    # ---- one ADMM iteration (Alg. 2 lines 5–8) -----------------------------
-    def _step_impl(self, state):
-        (x, S, y, T, x1, S1, y1, T1, mu, Lam, sig, Gam, lam_ws) = state
-        rho = self.cfg.rho
-        m = self.ops.m
-        # Y-update (Eq. 24)
-        x1n_g = _proj_card_nonneg((x + mu / rho)[:m], self.r, self.edge_ok)
-        x1n_l = jnp.maximum((x + mu / rho)[m], 0.0)
-        x1n = jnp.concatenate([x1n_g, x1n_l[None]])
-        S1n = _proj_psd(S + Lam / rho, sign=-1.0)
-        y1n = jnp.maximum(y + sig / rho, 0.0)
-        T1n = _proj_psd(T + Gam / rho, sign=+1.0)
-        # X-update (Eq. 27): min cᵀx + ρ/2‖X − Y₁ + D/ρ‖² s.t. A X = b
-        V = (x1n - (mu + self.c) / rho, S1n - Lam / rho, y1n - sig / rho, T1n - Gam / rho)
-        Xn, lam_new = schur_cg_solve(
-            self.A_op, self.AT_op, V, self.b_rhs(), lam_ws,
-            tol=self.cfg.cg_tol, maxiter=self.cfg.cg_maxiter,
-        )
-        xn, Sn, yn, Tn = Xn
-        # dual update (Eq. 22)
-        mun = mu + rho * (xn - x1n)
-        Lamn = Lam + rho * (Sn - S1n)
-        sign_ = sig + rho * (yn - y1n)
-        Gamn = Gam + rho * (Tn - T1n)
-        res = (jnp.sum((xn - x1n) ** 2) + jnp.sum((Sn - S1n) ** 2)
-               + jnp.sum((yn - y1n) ** 2) + jnp.sum((Tn - T1n) ** 2))
-        new_state = (xn, Sn, yn, Tn, x1n, S1n, y1n, T1n, mun, Lamn, sign_, Gamn, lam_new)
-        return new_state, res
-
-    # ---- scipy ILU path (paper-faithful §V-C) -------------------------------
-    def _sparse_A(self):
-        import scipy.sparse as sp
-
-        n, m = self.n, self.ops.m
-        edges = self.ops.edges
-        rows, cols, vals = [], [], []
-
-        def vecidx(i, j):  # column-major vec
-            return i + j * n
-
-        # B̃⁻ / B̃⁺ blocks (n² rows each) acting on x = [g; λ̃]
-        for l, (i, j) in enumerate(edges):
-            for (a, b2, v) in ((i, i, 1.0), (j, j, 1.0), (i, j, -1.0), (j, i, -1.0)):
-                rows.append(vecidx(a, b2)); cols.append(l); vals.append(v)           # B⁻
-                rows.append(n * n + vecidx(a, b2)); cols.append(l); vals.append(v)   # B⁺
-        for i in range(n):
-            rows.append(vecidx(i, i)); cols.append(m); vals.append(-1.0)   # −λ̃ I
-            rows.append(n * n + vecidx(i, i)); cols.append(m); vals.append(1.0)
-        # D block: diag(L) rows
-        for l, (i, j) in enumerate(edges):
-            rows.append(2 * n * n + i); cols.append(l); vals.append(1.0)
-            rows.append(2 * n * n + j); cols.append(l); vals.append(1.0)
-        Nx = m + 1 + n * n + n + n * n
-        Nc = 2 * n * n + n
-        Ax = sp.csr_matrix(sp.coo_matrix((vals, (rows, cols)), shape=(Nc, m + 1)))
-        IS = sp.hstack([sp.coo_matrix((n * n, 0)), sp.eye(n * n)])
-        A = sp.bmat([
-            [Ax[: n * n, :], sp.eye(n * n), sp.coo_matrix((n * n, n)), sp.coo_matrix((n * n, n * n))],
-            [Ax[n * n: 2 * n * n, :], sp.coo_matrix((n * n, n * n)), sp.coo_matrix((n * n, n)), sp.eye(n * n)],
-            [Ax[2 * n * n:, :], sp.coo_matrix((n, n * n)), sp.eye(n), sp.coo_matrix((n, n * n))],
-        ], format="csc")
-        assert A.shape == (Nc, Nx)
-        _ = IS
-        return A
-
-    def _pack(self, X):
-        x, S, y, T = X
-        return np.concatenate([np.asarray(x), np.asarray(S).ravel(order="F"),
-                               np.asarray(y), np.asarray(T).ravel(order="F")])
-
-    def _unpack(self, v):
-        n, m = self.n, self.ops.m
-        o = 0
-        x = v[o:o + m + 1]; o += m + 1
-        S = v[o:o + n * n].reshape(n, n, order="F"); o += n * n
-        y = v[o:o + n]; o += n
-        T = v[o:o + n * n].reshape(n, n, order="F")
-        return (jnp.asarray(x), jnp.asarray(S), jnp.asarray(y), jnp.asarray(T))
-
-    def _step_ilu(self, state):
-        (x, S, y, T, x1, S1, y1, T1, mu, Lam, sig, Gam, lam_ws) = state
-        rho = self.cfg.rho
-        m = self.ops.m
-        x1n_g = _proj_card_nonneg((x + mu / rho)[:m], self.r, self.edge_ok)
-        x1n = jnp.concatenate([x1n_g, jnp.maximum((x + mu / rho)[m], 0.0)[None]])
-        S1n = _proj_psd(S + Lam / rho, -1.0)
-        y1n = jnp.maximum(y + sig / rho, 0.0)
-        T1n = _proj_psd(T + Gam / rho, +1.0)
-        V = (x1n - (mu + self.c) / rho, S1n - Lam / rho, y1n - sig / rho, T1n - Gam / rho)
-        b = self.b_rhs()
-        bp = np.concatenate([np.asarray(b[0]).ravel(order="F"),
-                             np.asarray(b[1]).ravel(order="F"), np.asarray(b[2])])
-        if self._ilu is None:
-            self._ilu = ILUKKTSolver(self._sparse_A())
-        Xv, _ = self._ilu.solve(self._pack(V), bp, tol=self.cfg.cg_tol)
-        xn, Sn, yn, Tn = self._unpack(Xv)
-        mun = mu + rho * (xn - x1n)
-        Lamn = Lam + rho * (Sn - S1n)
-        sign_ = sig + rho * (yn - y1n)
-        Gamn = Gam + rho * (Tn - T1n)
-        res = float(jnp.sum((xn - x1n) ** 2) + jnp.sum((Sn - S1n) ** 2)
-                    + jnp.sum((yn - y1n) ** 2) + jnp.sum((Tn - T1n) ** 2))
-        return (xn, Sn, yn, Tn, x1n, S1n, y1n, T1n, mun, Lamn, sign_, Gamn, lam_ws), res
-
-    # ---- driver -------------------------------------------------------------
-    def init_state(self, g0: np.ndarray | None = None, lam0: float = 0.5):
-        n, m = self.n, self.ops.m
-        g = jnp.zeros(m) if g0 is None else jnp.asarray(g0, dtype=jnp.float64)
-        x = jnp.concatenate([g, jnp.array([lam0])])
-        L = self.ops.L_of_g(g)
-        S = -(L - lam0 * self.ops.I + self.ops.B0)
-        T = 2 * self.ops.I - (L + lam0 * self.ops.I)
-        y = 1.0 - jnp.diag(L)
-        z0 = jnp.zeros((n, n))
-        lam_ws = (z0, z0, jnp.zeros(n))
-        return (x, S, y, T, x, S, y, T,
-                jnp.zeros(m + 1), z0, jnp.zeros(n), z0, lam_ws)
+    def init_state(self, g0: np.ndarray | None = None, lam0: float = 0.5) -> ADMMState:
+        g = jnp.zeros(self.spec.m) if g0 is None else jnp.asarray(g0, dtype=jnp.float64)
+        return init_state(self.spec, g, lam0)
 
     def solve(self, g0=None, lam0: float = 0.5) -> ADMMResult:
-        state = self.init_state(g0, lam0)
-        step = {"schur_cg": self._step, "kkt_bicgstab": self._step_kkt,
-                "kkt_bicgstab_ilu": self._step_ilu}[self.cfg.solver]
-        history, res = [], np.inf
-        it = 0
-        for it in range(1, self.cfg.max_iters + 1):
-            state, res = step(state)
-            res = float(res)
-            if it % self.cfg.check_every == 0 or it == 1:
-                history.append((it, res, float(state[0][-1])))
-                if self.cfg.verbose:
-                    print(f"[admm-homo] it={it} res={res:.3e} lam~={float(state[0][-1]):.4f}")
-            if res < self.cfg.eps:
-                break
-        x, x1 = state[0], state[4]
-        m = self.ops.m
-        return ADMMResult(
-            g=np.asarray(x1[:m]), g_raw=np.asarray(x[:m]), lam_tilde=float(x1[m]),
-            z=None, iters=it, residual=res, history=history,
-        )
+        return self._solve_state(self.init_state(g0, lam0))
 
-    def _step_kkt(self, state):
-        (x, S, y, T, x1, S1, y1, T1, mu, Lam, sig, Gam, lam_ws) = state
-        rho = self.cfg.rho
-        m = self.ops.m
-        x1n_g = _proj_card_nonneg((x + mu / rho)[:m], self.r, self.edge_ok)
-        x1n = jnp.concatenate([x1n_g, jnp.maximum((x + mu / rho)[m], 0.0)[None]])
-        S1n = _proj_psd(S + Lam / rho, -1.0)
-        y1n = jnp.maximum(y + sig / rho, 0.0)
-        T1n = _proj_psd(T + Gam / rho, +1.0)
-        V = (x1n - (mu + self.c) / rho, S1n - Lam / rho, y1n - sig / rho, T1n - Gam / rho)
-        Xn, lam_new = kkt_bicgstab_solve(
-            self.A_op, self.AT_op, V, self.b_rhs(), (x, S, y, T), lam_ws,
-            tol=self.cfg.cg_tol, maxiter=self.cfg.cg_maxiter,
-        )
-        xn, Sn, yn, Tn = Xn
-        mun = mu + rho * (xn - x1n)
-        Lamn = Lam + rho * (Sn - S1n)
-        sign_ = sig + rho * (yn - y1n)
-        Gamn = Gam + rho * (Tn - T1n)
-        res = (jnp.sum((xn - x1n) ** 2) + jnp.sum((Sn - S1n) ** 2)
-               + jnp.sum((yn - y1n) ** 2) + jnp.sum((Tn - T1n) ** 2))
-        return (xn, Sn, yn, Tn, x1n, S1n, y1n, T1n, mun, Lamn, sign_, Gamn, lam_new), res
+    def solve_batched(self, g0s: np.ndarray, lam0s: np.ndarray) -> list[ADMMResult]:
+        """Solve a batch of warm starts in one vmapped device call.
+
+        ``g0s``: (B, m) edge-weight warm starts; ``lam0s``: (B,) λ̃ starts.
+        """
+        import jax
+
+        cfg = self._batched_cfg()
+        g0s = jnp.asarray(g0s, dtype=jnp.float64)
+        lam0s = jnp.asarray(lam0s, dtype=jnp.float64)
+        states = jax.vmap(lambda g, l: init_state(self.spec, g, l))(g0s, lam0s)
+        return solve_batched_spec(self.spec, states, cfg)
+
+    def _ilu_step(self):
+        if self._ilu_step_fn is None:
+            self._ilu_step_fn = make_ilu_step(self.spec)
+        return self._ilu_step_fn
 
 
-class HeterogeneousADMM:
+class HeterogeneousADMM(_ADMMBase):
     """Eq. (28) solver with binary edge selection z and capacity rows M z = e
     (equality) or M z + s = e, s ≥ 0 (inequality capacities).
     """
@@ -323,124 +138,27 @@ class HeterogeneousADMM:
                  cfg: ADMMConfig = ADMMConfig(), equality: bool = True,
                  edge_ok: np.ndarray | None = None):
         self.n, self.cfg = n, cfg
-        self.ops = _TopoOperators(n, cfg.alpha)
-        m = self.ops.m
-        self.edge_ok = jnp.ones(m, dtype=bool) if edge_ok is None else jnp.asarray(edge_ok)
-        self.r = min(r, int(np.asarray(self.edge_ok).sum()))
-        assert M.shape[1] == m, f"M must cover all {m} candidate edges"
-        self.M = jnp.asarray(M, dtype=jnp.float64)
-        self.e_cap = jnp.asarray(e_cap, dtype=jnp.float64)
-        self.q = M.shape[0]
+        self.spec = make_hetero_spec(n, r, np.asarray(M), np.asarray(e_cap),
+                                     cfg, equality=equality, edge_ok=edge_ok)
         self.equality = equality
-        self.c = jnp.zeros(m + 1).at[m].set(-1.0)
-        self._step = jax.jit(self._step_impl)
 
-    # X' = (x, S, y, T, z, ν, s); constraint space λ' = (P, Q, w, u, v)
-    def A_op(self, X):
-        x, S, y, T, z, nu, s = X
-        g, lam = x[:-1], x[-1]
-        L = self.ops.L_of_g(g)
-        I = self.ops.I
-        r4 = self.M @ z + (s if not self.equality else 0.0)
-        r5 = g - z + nu
-        return (L - lam * I + S, L + lam * I + T, jnp.diag(L) + y, r4, r5)
-
-    def AT_op(self, lamv):
-        P, Q, w, u, v = lamv
-        xg = self.ops.edge_quadform(P + Q) + self.ops.deg_sum(w) + v
-        xl = -jnp.trace(P) + jnp.trace(Q)
-        x_adj = jnp.concatenate([xg, xl[None]])
-        z_adj = self.M.T @ u - v
-        nu_adj = v
-        s_adj = u if not self.equality else jnp.zeros_like(u)
-        return (x_adj, P, w, Q, z_adj, nu_adj, s_adj)
-
-    def b_rhs(self):
-        n = self.n
-        return (-self.ops.B0, 2.0 * self.ops.I, jnp.ones(n), self.e_cap,
-                jnp.zeros(self.ops.m))
-
-    def _step_impl(self, state):
-        (x, S, y, T, z, nu, s,
-         x1, S1, y1, T1, z1, nu1, s1,
-         mu, Lam, sig, Gam, iota, kap, psi, lam_ws) = state
-        rho = self.cfg.rho
-        m = self.ops.m
-        # Y'-update (Eq. 30): per-block projections
-        x1n_g = _proj_card_nonneg((x + mu / rho)[:m], self.r, self.edge_ok)
-        x1n = jnp.concatenate([x1n_g, jnp.maximum((x + mu / rho)[m], 0.0)[None]])
-        S1n = _proj_psd(S + Lam / rho, -1.0)
-        y1n = jnp.maximum(y + sig / rho, 0.0)
-        T1n = _proj_psd(T + Gam / rho, +1.0)
-        z1n = _proj_binary_topr(z + iota / rho, self.r, self.edge_ok)
-        nu1n = jnp.maximum(nu + kap / rho, 0.0)
-        s1n = jnp.maximum(s + psi / rho, 0.0) if not self.equality else jnp.zeros_like(s)
-        # X'-update (Eq. 31)
-        V = (x1n - (mu + self.c) / rho, S1n - Lam / rho, y1n - sig / rho,
-             T1n - Gam / rho, z1n - iota / rho, nu1n - kap / rho,
-             s1n - psi / rho)
-        if self.equality:
-            # without a slack variable the s-block must stay pinned at 0
-            V = V[:6] + (jnp.zeros_like(s),)
-        Xn, lam_new = schur_cg_solve(
-            self.A_op, self.AT_op, V, self.b_rhs(), lam_ws,
-            tol=self.cfg.cg_tol, maxiter=self.cfg.cg_maxiter,
-        )
-        xn, Sn, yn, Tn, zn, nun, sn = Xn
-        if self.equality:
-            sn = jnp.zeros_like(s)
-        # dual update (Eq. 33)
-        mun = mu + rho * (xn - x1n)
-        Lamn = Lam + rho * (Sn - S1n)
-        sign_ = sig + rho * (yn - y1n)
-        Gamn = Gam + rho * (Tn - T1n)
-        iotan = iota + rho * (zn - z1n)
-        kapn = kap + rho * (nun - nu1n)
-        psin = psi + rho * (sn - s1n) if not self.equality else psi
-        res = (jnp.sum((xn - x1n) ** 2) + jnp.sum((Sn - S1n) ** 2)
-               + jnp.sum((yn - y1n) ** 2) + jnp.sum((Tn - T1n) ** 2)
-               + jnp.sum((zn - z1n) ** 2) + jnp.sum((nun - nu1n) ** 2)
-               + jnp.sum((sn - s1n) ** 2))
-        new_state = (xn, Sn, yn, Tn, zn, nun, sn,
-                     x1n, S1n, y1n, T1n, z1n, nu1n, s1n,
-                     mun, Lamn, sign_, Gamn, iotan, kapn, psin, lam_new)
-        return new_state, res
-
-    def init_state(self, g0=None, z0=None, lam0: float = 0.5):
-        n, m, q = self.n, self.ops.m, self.q
-        g = jnp.zeros(m) if g0 is None else jnp.asarray(g0, dtype=jnp.float64)
-        z = (g > 0).astype(jnp.float64) if z0 is None else jnp.asarray(z0, dtype=jnp.float64)
-        x = jnp.concatenate([g, jnp.array([lam0])])
-        L = self.ops.L_of_g(g)
-        S = -(L - lam0 * self.ops.I + self.ops.B0)
-        T = 2 * self.ops.I - (L + lam0 * self.ops.I)
-        y = 1.0 - jnp.diag(L)
-        nu = z - g
-        s = jnp.maximum(self.e_cap - self.M @ z, 0.0) if not self.equality else jnp.zeros(q)
-        zn2 = jnp.zeros((n, n))
-        lam_ws = (zn2, zn2, jnp.zeros(n), jnp.zeros(q), jnp.zeros(m))
-        return (x, S, y, T, z, nu, s,
-                x, S, y, T, z, nu, s,
-                jnp.zeros(m + 1), zn2, jnp.zeros(n), zn2,
-                jnp.zeros(m), jnp.zeros(m), jnp.zeros(q), lam_ws)
+    def init_state(self, g0=None, z0=None, lam0: float = 0.5) -> ADMMState:
+        g = jnp.zeros(self.spec.m) if g0 is None else jnp.asarray(g0, dtype=jnp.float64)
+        z = None if z0 is None else jnp.asarray(z0, dtype=jnp.float64)
+        return init_state(self.spec, g, lam0, z=z)
 
     def solve(self, g0=None, z0=None, lam0: float = 0.5) -> ADMMResult:
-        state = self.init_state(g0, z0, lam0)
-        history, res = [], np.inf
-        it = 0
-        for it in range(1, self.cfg.max_iters + 1):
-            state, res = self._step(state)
-            res = float(res)
-            if it % self.cfg.check_every == 0 or it == 1:
-                history.append((it, res, float(state[0][-1])))
-                if self.cfg.verbose:
-                    print(f"[admm-het] it={it} res={res:.3e} lam~={float(state[0][-1]):.4f}")
-            if res < self.cfg.eps:
-                break
-        x1, z1 = state[7], state[11]
-        x = state[0]
-        m = self.ops.m
-        return ADMMResult(
-            g=np.asarray(x1[:m]), g_raw=np.asarray(x[:m]), lam_tilde=float(x1[m]),
-            z=np.asarray(z1), iters=it, residual=res, history=history,
-        )
+        return self._solve_state(self.init_state(g0, z0, lam0))
+
+    def solve_batched(self, g0s: np.ndarray, z0s: np.ndarray,
+                      lam0s: np.ndarray) -> list[ADMMResult]:
+        """Batched restarts: (B, m) g0s, (B, m) z0s, (B,) lam0s."""
+        import jax
+
+        cfg = self._batched_cfg()
+        g0s = jnp.asarray(g0s, dtype=jnp.float64)
+        z0s = jnp.asarray(z0s, dtype=jnp.float64)
+        lam0s = jnp.asarray(lam0s, dtype=jnp.float64)
+        states = jax.vmap(lambda g, z, l: init_state(self.spec, g, l, z=z))(
+            g0s, z0s, lam0s)
+        return solve_batched_spec(self.spec, states, cfg)

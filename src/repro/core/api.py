@@ -4,12 +4,17 @@ Pipeline (the paper's full recipe, §IV–§VI):
   1. scenario → ConstraintSet (M, e) and candidate-edge admissibility,
   2. Algorithm 1 (node scenarios) → per-node edge capacities maximizing b_unit,
   3. simulated-annealing warm start (low ASPL, feasible) [§VI],
-  4. Algorithm 2 ADMM (homogeneous Eq. 20 / heterogeneous Eq. 28),
+  4. Algorithm 2 ADMM (homogeneous Eq. 20 / heterogeneous Eq. 28) — with
+     ``cfg.restarts > 1`` all restarts are solved in one batched,
+     vmapped device call (engine ``solve_batched``, DESIGN.md §4),
   5. support extraction + greedy feasibility repair (beyond paper, see
      DESIGN.md §6) + convex weight polish,
   6. keep the better of {warm start polished, ADMM polished} — the ADMM is
      non-convex (cardinality / binary constraints), so this guards against
      bad local points, mirroring the paper's initialization-sensitivity note.
+
+``sweep_topologies`` amortizes step 4 across many (n, r) scenarios: for a
+fixed n the whole cardinality sweep runs as one vmapped solve.
 """
 from __future__ import annotations
 
@@ -24,7 +29,8 @@ from .constraints import ConstraintSet
 from .graph import Topology, all_edges, edge_index, is_connected, r_asym, weight_matrix_from_weights
 from .weights import metropolis_weights, polish_weights
 
-__all__ = ["BATopoConfig", "optimize_topology", "extract_support", "repair_selection"]
+__all__ = ["BATopoConfig", "optimize_topology", "sweep_topologies",
+           "extract_support", "repair_selection"]
 
 
 @dataclass
@@ -65,15 +71,18 @@ def repair_selection(n: int, sel: np.ndarray, g: np.ndarray, cs: ConstraintSet |
        selected edge contributing to the most-violated row.
     2. While the graph is disconnected, add the highest-weight admissible
        edge joining two components that does not violate capacities.
+
+    Capacity usage ``M @ sel`` is computed once per phase and updated
+    incrementally as edges are dropped/added (it used to be recomputed per
+    candidate edge, a quadratic hot spot on dense candidate sets).
     """
     edges_full = all_edges(n)
-    eidx = edge_index(n)
     sel = sel.copy()
     g = np.asarray(g, dtype=np.float64)
+    usage = cs.M @ sel.astype(np.int64) if cs is not None else None
 
     if cs is not None:
         while True:
-            usage = cs.M @ sel.astype(np.int64)
             over = usage - cs.e_cap
             if np.all(over <= 0):
                 break
@@ -81,6 +90,7 @@ def repair_selection(n: int, sel: np.ndarray, g: np.ndarray, cs: ConstraintSet |
             members = [l for l in np.nonzero(sel)[0] if cs.M[row, l]]
             drop = min(members, key=lambda l: g[l])
             sel[drop] = False
+            usage = usage - cs.M[:, drop]
 
     def comps(sel_mask):
         parent = list(range(n))
@@ -109,7 +119,6 @@ def repair_selection(n: int, sel: np.ndarray, g: np.ndarray, cs: ConstraintSet |
             if cs is not None:
                 if not cs.edge_ok[l]:
                     continue
-                usage = cs.M @ sel.astype(np.int64)
                 if np.any(usage + cs.M[:, l] > cs.e_cap):
                     continue
             cands.append(l)
@@ -117,6 +126,8 @@ def repair_selection(n: int, sel: np.ndarray, g: np.ndarray, cs: ConstraintSet |
             break  # cannot connect under capacities — caller handles r_asym=1
         best = max(cands, key=lambda l: g[l])
         sel[best] = True
+        if cs is not None:
+            usage = usage + cs.M[:, best]
     return sel
 
 
@@ -143,6 +154,43 @@ def _finalize(n: int, sel: np.ndarray, cfg: BATopoConfig, name: str,
     return t
 
 
+def _warm_start(n: int, r: int, scenario: str, cs: ConstraintSet | None,
+                deg_targets, cfg: BATopoConfig, restart: int):
+    """Host-side warm start: greedy feasible graph + simulated annealing.
+    Returns (g0, z0, lam0)."""
+    seed = cfg.seed + 1000 * restart
+    rng = np.random.default_rng(seed)
+    if deg_targets is not None:
+        warm_cs = cs if scenario == "node" else None
+        edges0 = greedy_degree_graph(n, deg_targets, rng, warm_cs)
+    else:
+        edges0 = _greedy_constraint_graph(n, r, cs, rng)
+    edges0 = anneal_topology(n, edges0, cs if scenario != "homo" else None,
+                             iters=cfg.sa_iters, seed=seed)
+    eidx = edge_index(n)
+    m = len(all_edges(n))
+    z0 = np.zeros(m)
+    for e in edges0:
+        z0[eidx[e]] = 1.0
+    g0 = np.zeros(m)
+    gm = metropolis_weights(n, edges0)
+    for k, e in enumerate(edges0):
+        g0[eidx[e]] = gm[k]
+    W0 = weight_matrix_from_weights(n, edges0, gm)
+    lam0 = max(1.0 - r_asym(W0), 0.05)
+    return g0, z0, lam0
+
+
+def _make_solver(n: int, r: int, scenario: str, cs: ConstraintSet | None,
+                 cfg: BATopoConfig):
+    if scenario == "homo":
+        return HomogeneousADMM(n, r, cfg.admm)
+    return HeterogeneousADMM(
+        n, r, np.asarray(cs.M, dtype=np.float64), np.asarray(cs.e_cap, dtype=np.float64),
+        cfg.admm, equality=cs.equality, edge_ok=np.asarray(cs.edge_ok),
+    )
+
+
 def optimize_topology(
     n: int,
     r: int,
@@ -160,9 +208,12 @@ def optimize_topology(
         degree rows.
       - "constraint": any ConstraintSet (intra-server, BCube, pod-boundary)
         with inequality capacities.
+
+    With ``cfg.restarts > 1`` and a JAX backend, all restarts are solved by
+    one batched device call; the best candidate (lowest ``r_asym`` after
+    repair + polish) wins.
     """
     cfg = cfg or BATopoConfig()
-    rng = np.random.default_rng(cfg.seed)
     meta: dict = {"scenario": scenario, "r": r}
 
     if scenario == "node":
@@ -182,52 +233,41 @@ def optimize_topology(
     else:
         deg_targets = _homo_degree_targets(n, r)
 
-    # ---- warm start ---------------------------------------------------------
-    best_topo: Topology | None = None
+    # ---- warm starts (host) + one solver for every restart ------------------
+    n_restarts = max(1, cfg.restarts)
+    warms = [_warm_start(n, r, scenario, cs, deg_targets, cfg, k)
+             for k in range(n_restarts)]
+    warm_topos = [_finalize(n, z0.astype(bool), cfg, f"ba-topo(n={n},r={r},warm)",
+                            cs, dict(meta)) for _, z0, _ in warms]
 
-    for restart in range(max(1, cfg.restarts)):
-        seed = cfg.seed + 1000 * restart
-        rng = np.random.default_rng(seed)
-        if deg_targets is not None:
-            warm_cs = cs if scenario == "node" else None
-            edges0 = greedy_degree_graph(n, deg_targets, rng, warm_cs)
-        else:
-            edges0 = _greedy_constraint_graph(n, r, cs, rng)
-        edges0 = anneal_topology(n, edges0, cs if scenario != "homo" else None,
-                                 iters=cfg.sa_iters, seed=seed)
-        eidx = edge_index(n)
-        m = len(all_edges(n))
-        z0 = np.zeros(m)
-        for e in edges0:
-            z0[eidx[e]] = 1.0
-        g0 = np.zeros(m)
-        gm = metropolis_weights(n, edges0)
-        for k, e in enumerate(edges0):
-            g0[eidx[e]] = gm[k]
-        W0 = weight_matrix_from_weights(n, edges0, gm)
-        lam0 = max(1.0 - r_asym(W0), 0.05)
+    solver = _make_solver(n, r, scenario, cs, cfg)
 
-        warm_sel = z0.astype(bool)
-        warm_topo = _finalize(n, warm_sel, cfg, f"ba-topo(n={n},r={r},warm)", cs, dict(meta))
-
-        # ---- ADMM ------------------------------------------------------------
+    # ---- ADMM: batched restarts in one device call (scan driver only; an
+    # explicit driver="python" request keeps the per-restart loop) ----------
+    if (n_restarts > 1 and cfg.admm.solver != "kkt_bicgstab_ilu"
+            and cfg.admm.driver == "scan"):
+        g0s = np.stack([w[0] for w in warms])
+        lam0s = np.asarray([w[2] for w in warms])
         if scenario == "homo":
-            solver = HomogeneousADMM(n, r, cfg.admm)
-            res = solver.solve(g0=g0, lam0=lam0)
+            results = solver.solve_batched(g0s, lam0s)
+        else:
+            results = solver.solve_batched(g0s, np.stack([w[1] for w in warms]), lam0s)
+    elif scenario == "homo":
+        results = [solver.solve(g0=g0, lam0=lam0) for g0, _, lam0 in warms]
+    else:
+        results = [solver.solve(g0=g0, z0=z0, lam0=lam0) for g0, z0, lam0 in warms]
+
+    best_topo: Topology | None = None
+    for (g0, z0, lam0), warm_topo, res in zip(warms, warm_topos, results):
+        if scenario == "homo":
             sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)
         else:
-            solver = HeterogeneousADMM(
-                n, r, np.asarray(cs.M, dtype=np.float64), np.asarray(cs.e_cap, dtype=np.float64),
-                cfg.admm, equality=cs.equality, edge_ok=np.asarray(cs.edge_ok),
-            )
-            res = solver.solve(g0=g0, z0=z0, lam0=lam0)
             sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol, z=res.z,
                                   edge_ok=np.asarray(cs.edge_ok))
         sel = repair_selection(n, sel, res.g + res.g_raw, cs)
         admm_topo = _finalize(n, sel, cfg, f"ba-topo(n={n},r={r})", cs, {**meta,
                               "admm_iters": res.iters, "admm_residual": res.residual,
                               "lam_tilde": res.lam_tilde})
-
         for cand in (admm_topo, warm_topo):
             if not cand.meta.get("connected", False):
                 continue
@@ -236,10 +276,20 @@ def optimize_topology(
                 cand.meta["selected_from"] = src
                 best_topo = cand
 
-    # classic-topology candidates: the ADMM is non-convex, and on small
-    # tightly-budgeted instances a known-good structure (ring / torus) that
-    # happens to be feasible can beat a weak local optimum. Polish their
-    # weights with the same convex step so the comparison is fair.
+    best_topo = _consider_classics(n, r, cfg, cs, meta, best_topo)
+
+    assert best_topo is not None, "failed to construct any connected topology"
+    best_topo.meta["r_asym"] = best_topo.r_asym()
+    return best_topo
+
+
+def _consider_classics(n: int, r: int, cfg: BATopoConfig,
+                       cs: ConstraintSet | None, meta: dict,
+                       best_topo: Topology | None) -> Topology | None:
+    """Classic-topology candidates: the ADMM is non-convex, and on small
+    tightly-budgeted instances a known-good structure (ring / torus) that
+    happens to be feasible can beat a weak local optimum. Polish their
+    weights with the same convex step so the comparison is fair."""
     from .topologies import make_baseline
     classic: list = []
     for kind in ("ring", "torus", "hypercube"):
@@ -262,10 +312,75 @@ def optimize_topology(
                 best_topo is None or cand.r_asym() < best_topo.r_asym()):
             cand.meta["selected_from"] = f"classic:{base.name}"
             best_topo = cand
-
-    assert best_topo is not None, "failed to construct any connected topology"
-    best_topo.meta["r_asym"] = best_topo.r_asym()
     return best_topo
+
+
+def sweep_topologies(
+    ns, rs, cfg: BATopoConfig | None = None,
+) -> dict:
+    """Homogeneous multi-scenario sweep: a BA-Topo for every (n, r) pair.
+
+    For each node count n, the whole cardinality sweep ``rs`` runs as ONE
+    vmapped, scan-compiled ADMM call (engine ``solve_sweep_spec`` — the
+    budget r is a data leaf of the ProblemSpec, so instances with different
+    budgets share a compilation). Warm starts and post-processing (support
+    extraction, repair, polish, warm-start and classic-baseline comparison)
+    stay per-instance on host. Returns ``{(n, r): Topology}``, keyed by the
+    *requested* r (budgets above the candidate-edge count are clamped for
+    the solve); a value is ``None`` if no connected candidate was found.
+    Unlike ``optimize_topology``, the sweep uses one warm start per (n, r)
+    — ``cfg.restarts`` is not consulted — and, like ``solve_batched``, it
+    always runs the vmapped scan driver: a ``driver="python"`` preference
+    applies only to ``optimize_topology``/``solve``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from .engine import init_state, make_homo_spec, solve_sweep_spec
+
+    cfg = cfg or BATopoConfig()
+    if cfg.admm.driver not in ("scan", "python"):
+        raise ValueError(
+            f"unknown driver {cfg.admm.driver!r}; expected 'scan' or 'python'")
+    if cfg.admm.solver == "kkt_bicgstab_ilu":
+        raise ValueError(
+            "sweep_topologies needs a device backend (schur_cg or "
+            "kkt_bicgstab); the scipy-ILU backend is host-side")
+    out: dict = {}
+    for n in ns:
+        m = len(all_edges(n))
+        rs_req = [int(r) for r in rs]
+        rs_n = [min(r, m) for r in rs_req]  # solve with the clamped budget
+        spec = make_homo_spec(n, max(rs_n), cfg.admm)
+        warms = []
+        for k, r in enumerate(rs_n):
+            deg_targets = _homo_degree_targets(n, r)
+            warms.append(_warm_start(n, r, "homo", None, deg_targets, cfg, k))
+        states = [init_state(spec, jnp.asarray(g0), lam0) for g0, _, lam0 in warms]
+        batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        results = solve_sweep_spec(spec, np.asarray(rs_n), batched, cfg.admm)
+        for (r_req, r, (g0, z0, lam0), res) in zip(rs_req, rs_n, warms, results):
+            meta = {"scenario": "homo", "r": r}
+            sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)
+            sel = repair_selection(n, sel, res.g + res.g_raw, None)
+            admm_topo = _finalize(n, sel, cfg, f"ba-topo(n={n},r={r})", None,
+                                  {**meta, "admm_iters": res.iters,
+                                   "admm_residual": res.residual,
+                                   "lam_tilde": res.lam_tilde})
+            warm_topo = _finalize(n, z0.astype(bool), cfg,
+                                  f"ba-topo(n={n},r={r},warm)", None, dict(meta))
+            best = None
+            for cand, src in ((admm_topo, "admm"), (warm_topo, "warm-start")):
+                if not cand.meta.get("connected", False):
+                    continue
+                if best is None or cand.r_asym() < best.r_asym():
+                    cand.meta["selected_from"] = src
+                    best = cand
+            best = _consider_classics(n, r, cfg, None, meta, best)
+            if best is not None:
+                best.meta["r_asym"] = best.r_asym()
+            out[(n, r_req)] = best  # keyed by the *requested* budget
+    return out
 
 
 def _greedy_constraint_graph(n: int, r: int, cs: ConstraintSet, rng) -> list[tuple[int, int]]:

@@ -212,7 +212,7 @@ def pod_boundary_constraints(
     ici_cap_per_node: int = 4,
     dci_cap_total: int = 8,
 ) -> ConstraintSet:
-    """TPU adaptation (DESIGN.md §3): intra-pod ICI vs inter-pod DCI.
+    """TPU adaptation (DESIGN.md §7): intra-pod ICI vs inter-pod DCI.
 
     Rows: one per node for intra-pod edge capacity (ICI ports), plus one
     aggregate row for edges crossing the pod boundary (DCI).

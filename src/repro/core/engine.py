@@ -1,0 +1,639 @@
+"""Device-resident, batched ADMM solver engine (Algorithm 2, §V).
+
+This module is the single implementation of the ADMM iteration for both the
+homogeneous problem (Eq. 20) and the heterogeneous Mixed-Integer SDP
+(Eq. 28). The problem data lives in a :class:`ProblemSpec` pytree and the
+iterate in an :class:`ADMMState` pytree, so one pure ``step(spec, state)``
+serves every scenario/backend combination and composes with ``jax.jit``,
+``jax.lax.scan`` and ``jax.vmap``:
+
+  - ``solve_spec``          — chunked, scan-compiled driver: ``check_every``
+    iterations per device call, convergence checked on-device, residual/λ̃
+    history recorded at chunk granularity. Eliminates the per-iteration
+    host round-trip of a Python ``for`` loop (~``max_iters`` syncs/solve).
+  - ``solve_python``        — the seed per-iteration host driver, kept both
+    as the baseline for benchmarks and as the carrier for host-side
+    backends (scipy ILU).
+  - ``solve_batched_spec``  — ``jax.vmap`` of the scan driver over a batch
+    of warm starts (restarts run in one compiled call).
+  - ``solve_sweep_spec``    — ``jax.vmap`` over *problem* axes (cardinality
+    budget r, penalty ρ) with per-element warm starts: many (n, r)
+    scenarios amortize one compilation.
+
+Variable layout (homogeneous, Eq. 20):
+  X = (x, S, y, T)     with x = [g; λ̃] ∈ R^{m+1}
+  Y = (x₁, S₁, y₁, T₁)
+  duals D = (μ, Λ, σ, Γ)
+Constraints C_X (Eq. 23):
+  L(g) − λ̃I + S = −B₀,   L(g) + λ̃I + T = 2I,   diag(L(g)) + y = 1
+Heterogeneous appends (z, ν, s) with M z (+ s) = e and g − z + ν = 0.
+
+See DESIGN.md §2–§4 for the architecture rationale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .graph import all_edges
+from .linalg import ILUKKTSolver, kkt_bicgstab_solve, schur_cg_solve
+
+jax.config.update("jax_enable_x64", True)
+
+__all__ = [
+    "ADMMConfig", "ADMMResult", "ADMMState", "ProblemSpec",
+    "make_homo_spec", "make_hetero_spec", "init_state", "step",
+    "solve_spec", "solve_python", "solve_batched_spec", "solve_sweep_spec",
+    "proj_psd", "proj_card_nonneg", "proj_binary_topr", "build_sparse_A",
+]
+
+
+@dataclass
+class ADMMConfig:
+    rho: float = 5.0  # tuned on n=16, r=32: see DESIGN.md §5 (ρ=5 → 0.517 vs paper 0.52)
+    alpha: float = 2.0  # Lemma 1 shift; any α ≥ λ_{n−1}(L) works, and λ < 2 always (Eq. 7)
+    max_iters: int = 1500
+    eps: float = 1e-7  # threshold on the summed squared primal residual (Alg. 2 line 4)
+    solver: str = "schur_cg"  # schur_cg | kkt_bicgstab | kkt_bicgstab_ilu
+    driver: str = "scan"  # scan (device-resident) | python (seed per-iteration loop)
+    cg_tol: float = 1e-11
+    cg_maxiter: int = 3000
+    check_every: int = 10
+    verbose: bool = False
+
+
+@dataclass
+class ADMMResult:
+    g: np.ndarray          # edge weights (candidate-edge order), from x₁
+    g_raw: np.ndarray      # from x (pre-projection side)
+    lam_tilde: float
+    z: np.ndarray | None   # binary edge selection (hetero only)
+    iters: int
+    residual: float
+    history: list = field(default_factory=list)
+
+
+# =========================================================================
+# ProblemSpec — all problem data as one pytree
+# =========================================================================
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("r", "rho", "edge_ok", "c", "ei", "ej", "B0", "I", "M", "e_cap"),
+    meta_fields=("n", "m", "q", "hetero", "equality", "cg_tol", "cg_maxiter"),
+)
+@dataclass(frozen=True)
+class ProblemSpec:
+    """Pure-data description of one topology MI-SDP instance.
+
+    ``meta`` fields are static (part of the jit cache key / tree structure);
+    ``data`` fields are array leaves — notably ``r`` and ``rho`` are traced
+    scalars so ``jax.vmap`` can batch over cardinality budgets and penalty
+    weights without recompiling.
+    """
+
+    # -- static structure ---------------------------------------------------
+    n: int
+    m: int
+    q: int                    # capacity rows (0 for the homogeneous problem)
+    hetero: bool
+    equality: bool
+    cg_tol: float
+    cg_maxiter: int
+    # -- array leaves -------------------------------------------------------
+    r: jnp.ndarray            # scalar int64 — cardinality budget
+    rho: jnp.ndarray          # scalar float64 — ADMM penalty
+    edge_ok: jnp.ndarray      # (m,) bool admissibility mask
+    c: jnp.ndarray            # (m+1,) objective: minimize −λ̃
+    ei: jnp.ndarray           # (m,) edge endpoints i < j
+    ej: jnp.ndarray
+    B0: jnp.ndarray           # (n, n) Lemma-1 shift α·11ᵀ/n
+    I: jnp.ndarray            # (n, n)
+    M: jnp.ndarray | None     # (q, m) capacity rows (hetero only)
+    e_cap: jnp.ndarray | None # (q,) capacities (hetero only)
+
+    def replace(self, **kw) -> "ProblemSpec":
+        return dataclasses.replace(self, **kw)
+
+
+class ADMMState(NamedTuple):
+    """One ADMM iterate. Block tuples have 4 entries (homo: x, S, y, T) or
+    7 (hetero: + z, ν, s); structure is fixed by the spec's ``hetero`` flag."""
+
+    X: tuple   # primal blocks
+    Y: tuple   # projected blocks (Y / Y′)
+    D: tuple   # scaled duals
+    lam: tuple # constraint-space multipliers (X-step warm start)
+
+
+def _edge_arrays(n: int):
+    edges = all_edges(n)
+    ei = jnp.array([i for i, _ in edges])
+    ej = jnp.array([j for _, j in edges])
+    return edges, ei, ej
+
+
+def make_homo_spec(n: int, r: int, cfg: ADMMConfig,
+                   edge_ok: np.ndarray | None = None) -> ProblemSpec:
+    _, ei, ej = _edge_arrays(n)
+    m = ei.shape[0]
+    ok = jnp.ones(m, dtype=bool) if edge_ok is None else jnp.asarray(edge_ok, dtype=bool)
+    r_eff = min(int(r), int(np.asarray(ok).sum()))
+    return ProblemSpec(
+        n=n, m=m, q=0, hetero=False, equality=True,
+        cg_tol=cfg.cg_tol, cg_maxiter=cfg.cg_maxiter,
+        r=jnp.asarray(r_eff, dtype=jnp.int64),
+        rho=jnp.asarray(cfg.rho, dtype=jnp.float64),
+        edge_ok=ok,
+        c=jnp.zeros(m + 1).at[m].set(-1.0),
+        ei=ei, ej=ej,
+        B0=cfg.alpha * jnp.ones((n, n)) / n,
+        I=jnp.eye(n),
+        M=None, e_cap=None,
+    )
+
+
+def make_hetero_spec(n: int, r: int, M: np.ndarray, e_cap: np.ndarray,
+                     cfg: ADMMConfig, equality: bool = True,
+                     edge_ok: np.ndarray | None = None) -> ProblemSpec:
+    _, ei, ej = _edge_arrays(n)
+    m = int(ei.shape[0])
+    assert M.shape[1] == m, f"M must cover all {m} candidate edges"
+    ok = jnp.ones(m, dtype=bool) if edge_ok is None else jnp.asarray(edge_ok, dtype=bool)
+    r_eff = min(int(r), int(np.asarray(ok).sum()))
+    return ProblemSpec(
+        n=n, m=m, q=int(M.shape[0]), hetero=True, equality=equality,
+        cg_tol=cfg.cg_tol, cg_maxiter=cfg.cg_maxiter,
+        r=jnp.asarray(r_eff, dtype=jnp.int64),
+        rho=jnp.asarray(cfg.rho, dtype=jnp.float64),
+        edge_ok=ok,
+        c=jnp.zeros(m + 1).at[m].set(-1.0),
+        ei=ei, ej=ej,
+        B0=cfg.alpha * jnp.ones((n, n)) / n,
+        I=jnp.eye(n),
+        M=jnp.asarray(M, dtype=jnp.float64),
+        e_cap=jnp.asarray(e_cap, dtype=jnp.float64),
+    )
+
+
+# =========================================================================
+# Projections (Eq. 24/25/30) — r may be a traced scalar
+# =========================================================================
+
+def proj_psd(M: jnp.ndarray, sign: float) -> jnp.ndarray:
+    """Eq. 25: eigenvalue clipping. sign=+1 → PSD (T₁ ≽ 0), −1 → NSD (S₁ ≼ 0)."""
+    Msym = (M + M.T) / 2.0
+    ev, U = jnp.linalg.eigh(Msym)
+    ev = jnp.maximum(ev, 0.0) if sign > 0 else jnp.minimum(ev, 0.0)
+    return (U * ev) @ U.T
+
+
+def proj_card_nonneg(v: jnp.ndarray, r, ok: jnp.ndarray) -> jnp.ndarray:
+    """Project onto {g ≥ 0, Card(g) ≤ r} ∩ {g_l = 0 for inadmissible l}.
+
+    Keep the largest r nonnegative entries (Eq. 24 discussion), zero the
+    rest. ``r`` may be a Python int or a traced int scalar (the threshold is
+    read from the sorted vector at a dynamic index, so cardinality sweeps
+    can be vmapped).
+    """
+    v = jnp.where(ok, jnp.maximum(v, 0.0), 0.0)
+    m = v.shape[0]
+    r = jnp.asarray(r)
+    desc = -jnp.sort(-v)
+    # (r+1)-th largest; r ≥ m keeps every nonnegative entry (threshold < 0)
+    thresh = jnp.where(r >= m, -1.0, desc[jnp.minimum(r, m - 1)])
+    keep = v > jnp.maximum(thresh, 0.0)
+    return jnp.where(keep, v, 0.0)
+
+
+def proj_binary_topr(v: jnp.ndarray, r, ok: jnp.ndarray) -> jnp.ndarray:
+    """Heterogeneous z₁ projection: largest r entries → 1, others → 0 (§V-B).
+
+    Ties break to the lowest index (stable sort); ``+ 0.0`` folds −0.0
+    into +0.0 so signed-zero ties are index-ordered too (``lax.top_k``'s
+    total order instead ranks +0.0 above −0.0 — the one input class where
+    this deviates from the seed's top_k formulation).
+    """
+    v = jnp.where(ok, v + 0.0, -jnp.inf)
+    m = v.shape[0]
+    order = jnp.argsort(-v)  # stable: ties keep lowest index first
+    rank = jnp.zeros(m, dtype=jnp.int64).at[order].set(jnp.arange(m))
+    return (rank < jnp.asarray(r)).astype(v.dtype)
+
+
+# =========================================================================
+# Matrix-free constraint operator A, its adjoint, and the RHS b
+# =========================================================================
+
+def _L_of_g(spec: ProblemSpec, g: jnp.ndarray) -> jnp.ndarray:
+    ei, ej = spec.ei, spec.ej
+    L = jnp.zeros((spec.n, spec.n), dtype=g.dtype)
+    L = L.at[ei, ej].add(-g).at[ej, ei].add(-g)
+    L = L.at[ei, ei].add(g).at[ej, ej].add(g)
+    return L
+
+
+def _edge_quadform(spec: ProblemSpec, P: jnp.ndarray) -> jnp.ndarray:
+    """⟨∂L/∂g_l, P⟩ = P_ii + P_jj − P_ij − P_ji per edge l = {i, j}."""
+    ei, ej = spec.ei, spec.ej
+    return P[ei, ei] + P[ej, ej] - P[ei, ej] - P[ej, ei]
+
+
+def _deg_sum(spec: ProblemSpec, w: jnp.ndarray) -> jnp.ndarray:
+    """(Dᵀ w)_l = w_i + w_j."""
+    return w[spec.ei] + w[spec.ej]
+
+
+def A_op(spec: ProblemSpec, X):
+    """Constraint operator: 3 blocks (Eq. 23) plus capacity/coupling rows
+    (Eq. 29) when heterogeneous."""
+    x, S, y, T = X[:4]
+    g, lam = x[:-1], x[-1]
+    L = _L_of_g(spec, g)
+    I = spec.I
+    base = (L - lam * I + S, L + lam * I + T, jnp.diag(L) + y)
+    if not spec.hetero:
+        return base
+    z, nu, s = X[4], X[5], X[6]
+    r4 = spec.M @ z + (0.0 if spec.equality else s)
+    r5 = g - z + nu
+    return base + (r4, r5)
+
+
+def AT_op(spec: ProblemSpec, lamv):
+    if not spec.hetero:
+        P, Q, w = lamv
+        xg = _edge_quadform(spec, P + Q) + _deg_sum(spec, w)
+        xl = -jnp.trace(P) + jnp.trace(Q)
+        return (jnp.concatenate([xg, xl[None]]), P, w, Q)
+    P, Q, w, u, v = lamv
+    xg = _edge_quadform(spec, P + Q) + _deg_sum(spec, w) + v
+    xl = -jnp.trace(P) + jnp.trace(Q)
+    x_adj = jnp.concatenate([xg, xl[None]])
+    z_adj = spec.M.T @ u - v
+    s_adj = u if not spec.equality else jnp.zeros_like(u)
+    return (x_adj, P, w, Q, z_adj, v, s_adj)
+
+
+def b_rhs(spec: ProblemSpec):
+    base = (-spec.B0, 2.0 * spec.I, jnp.ones(spec.n))
+    if not spec.hetero:
+        return base
+    return base + (spec.e_cap, jnp.zeros(spec.m))
+
+
+# =========================================================================
+# The unified ADMM step (Alg. 2 lines 5–8 / 12–15)
+# =========================================================================
+
+def _project_blocks(spec: ProblemSpec, U):
+    """Y-update (Eq. 24 / Eq. 30): per-block Euclidean projections."""
+    m = spec.m
+    x1 = jnp.concatenate([
+        proj_card_nonneg(U[0][:m], spec.r, spec.edge_ok),
+        jnp.maximum(U[0][m], 0.0)[None],
+    ])
+    S1 = proj_psd(U[1], sign=-1.0)
+    y1 = jnp.maximum(U[2], 0.0)
+    T1 = proj_psd(U[3], sign=+1.0)
+    if not spec.hetero:
+        return (x1, S1, y1, T1)
+    z1 = proj_binary_topr(U[4], spec.r, spec.edge_ok)
+    nu1 = jnp.maximum(U[5], 0.0)
+    # without a slack variable the s-block stays pinned at 0
+    s1 = jnp.zeros_like(U[6]) if spec.equality else jnp.maximum(U[6], 0.0)
+    return (x1, S1, y1, T1, z1, nu1, s1)
+
+
+def _xstep_target(spec: ProblemSpec, Y, D):
+    """V = Y − (D + c·e₀)/ρ for the X-update (Eq. 27 / 31)."""
+    V = tuple(jax.tree.map(lambda y1, d: y1 - d / spec.rho, Y, D))
+    V = (V[0] - spec.c / spec.rho,) + V[1:]
+    if spec.hetero and spec.equality:
+        V = V[:6] + (jnp.zeros_like(V[6]),)
+    return V
+
+
+def step(spec: ProblemSpec, state: ADMMState, backend: str = "schur_cg"):
+    """One ADMM iteration: Y-projection, X-step KKT solve, dual update.
+
+    Pure and jittable for the JAX backends; ``vmap``/``scan`` compose over
+    it. Returns ``(new_state, squared primal residual)``.
+    """
+    rho = spec.rho
+    U = tuple(jax.tree.map(lambda x, d: x + d / rho, state.X, state.D))
+    Y = _project_blocks(spec, U)
+    V = _xstep_target(spec, Y, state.D)
+    A = partial(A_op, spec)
+    AT = partial(AT_op, spec)
+    if backend == "schur_cg":
+        Xn, lam = schur_cg_solve(A, AT, V, b_rhs(spec), state.lam,
+                                 tol=spec.cg_tol, maxiter=spec.cg_maxiter)
+    elif backend == "kkt_bicgstab":
+        Xn, lam = kkt_bicgstab_solve(A, AT, V, b_rhs(spec), state.X, state.lam,
+                                     tol=spec.cg_tol, maxiter=spec.cg_maxiter)
+    else:
+        raise ValueError(f"unknown device backend {backend!r}")
+    Xn = tuple(Xn)
+    if spec.hetero and spec.equality:
+        Xn = Xn[:6] + (jnp.zeros_like(Xn[6]),)
+    D = tuple(jax.tree.map(lambda d, xn, y1: d + rho * (xn - y1), state.D, Xn, Y))
+    res = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda xn, y1: jnp.sum((xn - y1) ** 2), Xn, Y),
+    )
+    return ADMMState(X=Xn, Y=Y, D=D, lam=tuple(lam)), res
+
+
+def init_state(spec: ProblemSpec, g: jnp.ndarray, lam0,
+               z: jnp.ndarray | None = None) -> ADMMState:
+    """Initial iterate from a warm start. Pure JAX — composes with vmap."""
+    n, m = spec.n, spec.m
+    g = jnp.asarray(g, dtype=jnp.float64)
+    lam0 = jnp.asarray(lam0, dtype=jnp.float64)
+    x = jnp.concatenate([g, lam0[None]])
+    L = _L_of_g(spec, g)
+    S = -(L - lam0 * spec.I + spec.B0)
+    T = 2 * spec.I - (L + lam0 * spec.I)
+    y = 1.0 - jnp.diag(L)
+    zn2 = jnp.zeros((n, n))
+    if not spec.hetero:
+        X = (x, S, y, T)
+        D = (jnp.zeros(m + 1), zn2, jnp.zeros(n), zn2)
+        lam = (zn2, zn2, jnp.zeros(n))
+        return ADMMState(X=X, Y=X, D=D, lam=lam)
+    q = spec.q
+    z = (g > 0).astype(jnp.float64) if z is None else jnp.asarray(z, dtype=jnp.float64)
+    nu = z - g
+    s = (jnp.zeros(q) if spec.equality
+         else jnp.maximum(spec.e_cap - spec.M @ z, 0.0))
+    X = (x, S, y, T, z, nu, s)
+    D = (jnp.zeros(m + 1), zn2, jnp.zeros(n), zn2,
+         jnp.zeros(m), jnp.zeros(m), jnp.zeros(q))
+    lam = (zn2, zn2, jnp.zeros(n), jnp.zeros(q), jnp.zeros(m))
+    return ADMMState(X=X, Y=X, D=D, lam=lam)
+
+
+# =========================================================================
+# Drivers
+# =========================================================================
+
+def _run_chunks(spec: ProblemSpec, state0: ADMMState, max_iters: int,
+                check_every: int, eps: float, backend: str):
+    """Device-resident driver: scan over chunks of ``check_every`` steps
+    (the last chunk is shortened so exactly ``max_iters`` iterations run).
+
+    Convergence is checked on-device once per chunk; a converged carry
+    skips the remaining chunks via ``lax.cond`` (under ``vmap`` the cond
+    lowers to a select, so batched solves run all chunks — still one
+    device call for the whole batch). History ys: (it, res, λ̃) per chunk.
+    """
+    n_chunks = -(-max_iters // check_every)
+    last = max_iters - check_every * (n_chunks - 1)
+    lengths = jnp.full(n_chunks, check_every, dtype=jnp.int64).at[-1].set(last)
+
+    def chunk_fn(carry, clen):
+        st, it, res, done = carry
+
+        def one_chunk(operand):
+            st_, _ = operand
+
+            def body(_, val):
+                st2, _ = val
+                return step(spec, st2, backend)
+
+            return lax.fori_loop(0, clen, body, (st_, jnp.asarray(jnp.inf)))
+
+        st2, res2 = lax.cond(done, lambda op: op, one_chunk, (st, res))
+        it2 = jnp.where(done, it, it + clen)
+        done2 = done | (res2 < eps)
+        return (st2, it2, res2, done2), (it2, res2, st2.X[0][-1])
+
+    init = (state0, jnp.asarray(0, dtype=jnp.int64), jnp.asarray(jnp.inf),
+            jnp.asarray(False))
+    (st, it, res, _), hist = lax.scan(chunk_fn, init, lengths)
+    return st, it, res, hist
+
+
+@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend"))
+def _solve_device(spec, state0, max_iters, check_every, eps, backend):
+    return _run_chunks(spec, state0, max_iters, check_every, eps, backend)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend"))
+def _solve_device_batched(spec, states, max_iters, check_every, eps, backend):
+    return jax.vmap(
+        lambda st: _run_chunks(spec, st, max_iters, check_every, eps, backend)
+    )(states)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend"))
+def _solve_device_sweep(spec, rs, rhos, states, max_iters, check_every, eps, backend):
+    def one(r, rho, st):
+        return _run_chunks(spec.replace(r=r, rho=rho), st, max_iters,
+                           check_every, eps, backend)
+
+    return jax.vmap(one)(rs, rhos, states)
+
+
+def _history_list(its, ress, lams) -> list:
+    hist, prev = [], 0
+    for it_, res_, lam_ in zip(np.asarray(its), np.asarray(ress), np.asarray(lams)):
+        it_ = int(it_)
+        if it_ <= prev:  # converged carry repeats the last chunk's entry
+            continue
+        hist.append((it_, float(res_), float(lam_)))
+        prev = it_
+    return hist
+
+
+def _result_from(spec: ProblemSpec, st: ADMMState, iters, res, history) -> ADMMResult:
+    m = spec.m
+    x, x1 = st.X[0], st.Y[0]
+    return ADMMResult(
+        g=np.asarray(x1[:m]), g_raw=np.asarray(x[:m]), lam_tilde=float(x1[m]),
+        z=np.asarray(st.Y[4]) if spec.hetero else None,
+        iters=int(iters), residual=float(res), history=history,
+    )
+
+
+def _chunk_plan(cfg: ADMMConfig) -> tuple[int, int]:
+    """(max_iters, chunk_len): convergence is checked every ``chunk_len``
+    iterations; the driver runs exactly ``max_iters`` iterations at most."""
+    return cfg.max_iters, min(cfg.check_every, cfg.max_iters)
+
+
+def solve_spec(spec: ProblemSpec, state0: ADMMState, cfg: ADMMConfig) -> ADMMResult:
+    """Scan-compiled solve: one (or a few) device calls for the whole run."""
+    max_iters, chunk = _chunk_plan(cfg)
+    st, it, res, hist = _solve_device(
+        spec, state0, max_iters=max_iters, check_every=chunk,
+        eps=cfg.eps, backend=cfg.solver)
+    history = _history_list(*hist)
+    if cfg.verbose:
+        tag = "admm-het" if spec.hetero else "admm-homo"
+        for it_, res_, lam_ in history:
+            print(f"[{tag}] it={it_} res={res_:.3e} lam~={lam_:.4f}")
+    return _result_from(spec, st, it, res, history)
+
+
+def solve_batched_spec(spec: ProblemSpec, states: ADMMState,
+                       cfg: ADMMConfig) -> list[ADMMResult]:
+    """Batched restarts: ``states`` has a leading batch axis on every leaf;
+    all restarts advance in one vmapped, scan-compiled device call."""
+    max_iters, chunk = _chunk_plan(cfg)
+    sts, its, ress, hists = _solve_device_batched(
+        spec, states, max_iters=max_iters, check_every=chunk,
+        eps=cfg.eps, backend=cfg.solver)
+    batch = int(np.asarray(its).shape[0])
+    out = []
+    for b in range(batch):
+        st_b = jax.tree.map(lambda a: a[b], sts)
+        # vmap puts the batch axis first: hists[k] is (batch, n_chunks)
+        hist = _history_list(hists[0][b], hists[1][b], hists[2][b])
+        out.append(_result_from(spec, st_b, its[b], ress[b], hist))
+    return out
+
+
+def solve_sweep_spec(spec: ProblemSpec, rs, states: ADMMState, cfg: ADMMConfig,
+                     rhos=None) -> list[ADMMResult]:
+    """Sweep over problem axes: element k solves the instance with budget
+    ``rs[k]`` (and optionally penalty ``rhos[k]``) from warm start k. All
+    instances share ``spec``'s shape (same n), so one compilation serves
+    the whole sweep."""
+    rs = jnp.asarray(rs, dtype=jnp.int64)
+    rhos = (jnp.broadcast_to(spec.rho, rs.shape) if rhos is None
+            else jnp.asarray(rhos, dtype=jnp.float64))
+    max_iters, chunk = _chunk_plan(cfg)
+    sts, its, ress, hists = _solve_device_sweep(
+        spec, rs, rhos, states, max_iters=max_iters, check_every=chunk,
+        eps=cfg.eps, backend=cfg.solver)
+    out = []
+    for b in range(int(rs.shape[0])):
+        st_b = jax.tree.map(lambda a: a[b], sts)
+        hist = _history_list(hists[0][b], hists[1][b], hists[2][b])
+        out.append(_result_from(spec.replace(r=rs[b]), st_b, its[b], ress[b], hist))
+    return out
+
+
+_jit_step = jax.jit(step, static_argnames=("backend",))
+
+
+def solve_python(spec: ProblemSpec, state0: ADMMState, cfg: ADMMConfig,
+                 step_fn=None, reuse_jit: bool = True) -> ADMMResult:
+    """Per-iteration host driver: one device call and one blocking
+    ``float(res)`` sync per iteration. Kept as (a) the benchmark baseline
+    the scan driver is measured against and (b) the carrier for host-side
+    backends (``step_fn`` = ILU closure).
+
+    By default the step shares the module-level jit cache, so repeated
+    solves compile once (like the scan driver). ``reuse_jit=False`` jits
+    per solve instead — the *seed's* cost structure, which jitted per
+    solver instance so every benchmark solve and every restart recompiled;
+    the benchmark uses it as the seed-faithful baseline (DESIGN.md §4)."""
+    if step_fn is None:
+        if reuse_jit:
+            backend = cfg.solver
+            step_fn = lambda st: _jit_step(spec, st, backend=backend)  # noqa: E731
+        else:
+            step_fn = jax.jit(partial(step, spec, backend=cfg.solver))
+    state, history, res = state0, [], np.inf
+    it = 0
+    for it in range(1, cfg.max_iters + 1):
+        state, res = step_fn(state)
+        res = float(res)
+        if it % cfg.check_every == 0 or it == 1:
+            history.append((it, res, float(state.X[0][-1])))
+            if cfg.verbose:
+                tag = "admm-het" if spec.hetero else "admm-homo"
+                print(f"[{tag}] it={it} res={res:.3e} lam~={float(state.X[0][-1]):.4f}")
+        if res < cfg.eps:
+            break
+    return _result_from(spec, state, it, res, history)
+
+
+# =========================================================================
+# Host-side ILU backend (paper-faithful §V-C) — homogeneous problem
+# =========================================================================
+
+def build_sparse_A(n: int, m: int, edges) -> "Any":
+    """Materialize the homogeneous constraint operator A (Nc × Nx) as a
+    scipy CSC matrix for the ILU-preconditioned KKT backend."""
+    import scipy.sparse as sp
+
+    rows, cols, vals = [], [], []
+
+    def vecidx(i, j):  # column-major vec
+        return i + j * n
+
+    # B̃⁻ / B̃⁺ blocks (n² rows each) acting on x = [g; λ̃]
+    for l, (i, j) in enumerate(edges):
+        for (a, b2, v) in ((i, i, 1.0), (j, j, 1.0), (i, j, -1.0), (j, i, -1.0)):
+            rows.append(vecidx(a, b2)); cols.append(l); vals.append(v)           # B⁻
+            rows.append(n * n + vecidx(a, b2)); cols.append(l); vals.append(v)   # B⁺
+    for i in range(n):
+        rows.append(vecidx(i, i)); cols.append(m); vals.append(-1.0)   # −λ̃ I
+        rows.append(n * n + vecidx(i, i)); cols.append(m); vals.append(1.0)
+    # D block: diag(L) rows
+    for l, (i, j) in enumerate(edges):
+        rows.append(2 * n * n + i); cols.append(l); vals.append(1.0)
+        rows.append(2 * n * n + j); cols.append(l); vals.append(1.0)
+    Nx = m + 1 + n * n + n + n * n
+    Nc = 2 * n * n + n
+    Ax = sp.csr_matrix(sp.coo_matrix((vals, (rows, cols)), shape=(Nc, m + 1)))
+    A = sp.bmat([
+        [Ax[: n * n, :], sp.eye(n * n), sp.coo_matrix((n * n, n)), sp.coo_matrix((n * n, n * n))],
+        [Ax[n * n: 2 * n * n, :], sp.coo_matrix((n * n, n * n)), sp.coo_matrix((n * n, n)), sp.eye(n * n)],
+        [Ax[2 * n * n:, :], sp.coo_matrix((n, n * n)), sp.eye(n), sp.coo_matrix((n, n * n))],
+    ], format="csc")
+    assert A.shape == (Nc, Nx)
+    return A
+
+
+def _pack_homo(X) -> np.ndarray:
+    x, S, y, T = X
+    return np.concatenate([np.asarray(x), np.asarray(S).ravel(order="F"),
+                           np.asarray(y), np.asarray(T).ravel(order="F")])
+
+
+def _unpack_homo(n: int, m: int, v: np.ndarray):
+    o = 0
+    x = v[o:o + m + 1]; o += m + 1
+    S = v[o:o + n * n].reshape(n, n, order="F"); o += n * n
+    y = v[o:o + n]; o += n
+    T = v[o:o + n * n].reshape(n, n, order="F")
+    return (jnp.asarray(x), jnp.asarray(S), jnp.asarray(y), jnp.asarray(T))
+
+
+def make_ilu_step(spec: ProblemSpec, ilu: ILUKKTSolver | None = None):
+    """Host-side step closure behind the same ``(state) → (state, res)``
+    interface as the jitted unified step. Homogeneous problem only."""
+    if spec.hetero:
+        raise ValueError("the ILU backend supports the homogeneous problem only")
+    if ilu is None:
+        edges = all_edges(spec.n)
+        ilu = ILUKKTSolver(build_sparse_A(spec.n, spec.m, edges))
+    b = b_rhs(spec)
+    bp = np.concatenate([np.asarray(b[0]).ravel(order="F"),
+                         np.asarray(b[1]).ravel(order="F"), np.asarray(b[2])])
+    rho = float(spec.rho)
+
+    def step_ilu(state: ADMMState):
+        U = tuple(jax.tree.map(lambda x, d: x + d / rho, state.X, state.D))
+        Y = _project_blocks(spec, U)
+        V = _xstep_target(spec, Y, state.D)
+        Xv, _ = ilu.solve(_pack_homo(V), bp, tol=spec.cg_tol)
+        Xn = _unpack_homo(spec.n, spec.m, Xv)
+        D = tuple(jax.tree.map(lambda d, xn, y1: d + rho * (xn - y1),
+                               state.D, Xn, Y))
+        res = sum(float(jnp.sum((xn - y1) ** 2)) for xn, y1 in zip(Xn, Y))
+        return ADMMState(X=Xn, Y=Y, D=D, lam=state.lam), res
+
+    return step_ilu

@@ -1,7 +1,7 @@
 """Gossip collective schedule: W → matching rounds of collective-permute.
 
 The paper's synchronization x ← W x (Eq. 1) runs over gloo point-to-point
-sends. TPU collectives are compiled and static, so we adapt (DESIGN.md §3):
+sends. TPU collectives are compiled and static, so we adapt (DESIGN.md §7):
 the undirected edge set is greedily edge-colored into *matching rounds* —
 in each round every worker exchanges with at most one neighbor — and each
 round becomes ONE ``jax.lax.ppermute`` (a bidirectional pair (i,j),(j,i) per

@@ -10,7 +10,7 @@ is chosen per architecture from its memory footprint:
                2-D ("data","model") tensor sharding; gossip runs over the
                "pod" axis only (n=2) exactly like the paper's inter-server
                tier. Single-pod train then has ONE worker (pure TP, no
-               gossip) — recorded in DESIGN.md §Hardware-adaptation.
+               gossip) — recorded in DESIGN.md §7.
 
 Inference shapes never replicate per worker: params shard 2-D over the whole
 mesh (FSDP-style), batch/caches over the batch axes.

@@ -8,7 +8,7 @@ keeping the model code mesh-agnostic.
 
 Needed because XLA's sharding propagation gives up on scatter/gather-fed
 buffers (the MoE dispatch) and replicates them — hundreds of GB/device at
-mixtral scale (see EXPERIMENTS.md §Dry-run).
+mixtral scale (see DESIGN.md §7).
 """
 from __future__ import annotations
 

@@ -1,0 +1,29 @@
+"""Degrade gracefully when optional dev dependencies are absent.
+
+``hypothesis`` is a dev-only dependency (see pyproject.toml). If it is not
+installed, the property-test modules that import it are skipped at
+collection instead of erroring the whole run.
+"""
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import re
+import warnings
+
+collect_ignore: list[str] = []
+
+_IMPORTS_HYPOTHESIS = re.compile(r"^\s*(from|import)\s+hypothesis\b", re.M)
+
+if importlib.util.find_spec("hypothesis") is None:
+    _here = pathlib.Path(__file__).parent
+    collect_ignore = sorted(
+        p.name for p in _here.glob("test_*.py")
+        if _IMPORTS_HYPOTHESIS.search(p.read_text(encoding="utf-8"))
+    )
+    if collect_ignore:
+        warnings.warn(
+            "hypothesis is not installed — skipping property-test modules: "
+            + ", ".join(collect_ignore),
+            stacklevel=1,
+        )

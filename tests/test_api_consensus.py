@@ -26,6 +26,30 @@ def test_optimize_node_respects_allocation():
     assert np.all(topo.deg <= alloc)
 
 
+def test_optimize_topology_batched_restarts():
+    """restarts > 1 go through the vmapped batched solve and still return a
+    valid connected topology."""
+    cfg = BATopoConfig(admm=ADMMConfig(max_iters=150), sa_iters=250,
+                       polish_iters=200, restarts=2)
+    topo = optimize_topology(10, 15, "homo", cfg=cfg)
+    topo.validate()
+    assert topo.r <= 15
+    assert "r_asym" in topo.meta
+
+
+def test_sweep_topologies_grid():
+    from repro.core import sweep_topologies
+
+    cfg = BATopoConfig(admm=ADMMConfig(max_iters=100), sa_iters=200,
+                       polish_iters=150)
+    out = sweep_topologies([8], [10, 12], cfg=cfg)
+    assert set(out) == {(8, 10), (8, 12)}
+    for (n, r), topo in out.items():
+        assert topo is not None
+        topo.validate()
+        assert topo.r <= r
+
+
 def test_consensus_rate_matches_r_asym():
     """Empirical per-iteration error decay ≈ r_asym (Eq. 2 ↔ Eq. 3)."""
     topo = torus2d(16)
