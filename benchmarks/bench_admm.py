@@ -53,6 +53,21 @@ def _postprocess(n: int, r: int, res) -> float:
     return float(r_asym(weight_matrix_from_weights(n, edges, g)))
 
 
+def _row_perf(row: dict, cfg: ADMMConfig, dt: float, res) -> dict:
+    """Uniform machine-readable perf fields (tracked across PRs via
+    ``benchmarks.run --json``): per-iteration wall time, CG iterations per
+    ADMM step, solver-stack configuration, final quality."""
+    iters = max(res.iters, 1)
+    row.update({
+        "psd_backend": cfg.psd_backend, "dtype": cfg.dtype,
+        "precond": cfg.precond, "cg_inexact": cfg.cg_inexact,
+        "ms_per_iter": round(dt / iters * 1e3, 3),
+        "cg_per_step": round(res.cg_iters / iters, 2),
+        "admm_iters": res.iters, "residual": float(res.residual),
+    })
+    return row
+
+
 def solve_once(n: int, r: int, solver_kind: str, driver: str, iters: int,
                seed: int, steady_state: bool = False) -> dict:
     cfg = ADMMConfig(max_iters=iters, solver=solver_kind, driver=driver)
@@ -88,10 +103,77 @@ def solve_once(n: int, r: int, solver_kind: str, driver: str, iters: int,
         res = solver.solve(g0=g0, lam0=lam0)
         dt = time.time() - t0
 
-    return {"n": n, "r": r, "solver": solver_kind, "driver": driver,
-            "timing": timing, "solve_s": round(dt, 3), "admm_iters": res.iters,
-            "residual": float(res.residual),
-            "r_asym": round(_postprocess(n, r, res), 4)}
+    row = {"n": n, "r": r, "solver": solver_kind, "driver": driver,
+           "timing": timing, "solve_s": round(dt, 3),
+           "r_asym": round(_postprocess(n, r, res), 4)}
+    return _row_perf(row, cfg, dt, res)
+
+
+def bench_fast(n: int, r: int, iters: int, seed: int) -> dict:
+    """Acceptance comparison (ISSUE 2): steady-state per-iteration time of
+    the fast solver stack (Jacobi+inexact CG, fp32 loop) vs the PR-1 engine.
+
+    The PR-1 engine is reconstructed exactly: exact fp64 CG to ``cg_tol``
+    with no preconditioner, ``eigh`` projections, and the seed's scatter-add
+    ``L(g)`` (a spec without the packed-index map falls back to it). Both
+    run the warm scan driver, so the delta is purely the solver stack.
+    Also reports the fused-gather exact fp64 path (the new default) and the
+    r_asym drift of the fast path vs the fp64 exact path.
+
+    Uses the API pipeline's structured warm start (greedy degree graph +
+    Metropolis weights) rather than the random-support warm start of the
+    other rows: from a good basin both precisions converge to the same
+    support, so the drift check is meaningful (with random warm starts the
+    nonconvex iteration limit-cycles and ANY bit-level difference — even
+    between two exact fp64 backends — diverges the trajectories;
+    DESIGN.md §4/§9).
+    """
+    from repro.core.anneal import greedy_degree_graph
+    from repro.core.graph import edge_index
+
+    rng = np.random.default_rng(seed)
+    edges0 = greedy_degree_graph(n, np.full(n, max(2 * r // n, 2)), rng)
+    eidx = edge_index(n)
+    g0 = np.zeros(len(all_edges(n)))
+    gm = metropolis_weights(n, edges0)
+    for k, e in enumerate(edges0):
+        g0[eidx[e]] = gm[k]
+    lam0 = 0.3
+
+    def timed(cfg, spec_patch=None):
+        solver = HomogeneousADMM(n, r, cfg)
+        spec = solver.spec if spec_patch is None else solver.spec.replace(**spec_patch)
+        state = E.init_state(spec, g0, lam0)
+        E.solve_spec(spec, state, cfg)  # compile
+        t0 = time.time()
+        res = E.solve_spec(spec, state, cfg)
+        return time.time() - t0, res
+
+    pr1_cfg = ADMMConfig(max_iters=iters, precond="none")
+    t_pr1, res_pr1 = timed(pr1_cfg, spec_patch={"lidx": None})
+    exact_cfg = ADMMConfig(max_iters=iters, precond="none")
+    t_exact, res_exact = timed(exact_cfg)
+    fast_cfg = ADMMConfig(max_iters=iters, precond="jacobi", cg_inexact=True,
+                          dtype="float32")
+    t_fast, res_fast = timed(fast_cfg)
+
+    r_exact = _postprocess(n, r, res_exact)
+    r_fast = _postprocess(n, r, res_fast)
+    # per-iteration ratios: eps-based early stopping can give the compared
+    # runs different iteration counts, so total-wall-time ratios would
+    # conflate convergence speed with per-iteration cost
+    ms_pr1 = t_pr1 / max(res_pr1.iters, 1) * 1e3
+    ms_exact = t_exact / max(res_exact.iters, 1) * 1e3
+    ms_fast = t_fast / max(res_fast.iters, 1) * 1e3
+    row = {"n": n, "r": r, "solver": "schur_cg", "driver": "scan",
+           "timing": "fast-compare (steady state)",
+           "pr1_ms_per_iter": round(ms_pr1, 3),
+           "exact_ms_per_iter": round(ms_exact, 3),
+           "speedup_vs_pr1": round(ms_pr1 / max(ms_fast, 1e-9), 2),
+           "speedup_vs_exact": round(ms_exact / max(ms_fast, 1e-9), 2),
+           "r_asym": round(r_fast, 4), "r_asym_exact": round(r_exact, 4),
+           "r_asym_drift": abs(r_fast - r_exact)}
+    return _row_perf(row, fast_cfg, t_fast, res_fast)
 
 
 def bench_batched(n: int, r: int, batch: int, iters: int, seed: int) -> dict:
@@ -143,6 +225,9 @@ def main(argv=None) -> None:
                     help="seed per-iteration loop (python) and/or scan")
     ap.add_argument("--batch", type=int, default=0,
                     help="also run the batched-restarts benchmark with this batch size")
+    ap.add_argument("--fast-nodes", default="",
+                    help="comma-separated node counts for the fast-compare rows "
+                         "(Jacobi+inexact+fp32 vs the PR-1 engine, steady state)")
     ap.add_argument("--steady-state", action="store_true",
                     help="time the python driver with a shared jit cache "
                          "instead of the seed's per-solve jit")
@@ -153,7 +238,7 @@ def main(argv=None) -> None:
     drivers = [d for d in args.drivers.split(",") if d]
     print("== ADMM solver engine (§V-C): backends × drivers ==")
     rows = []
-    for n in [int(x) for x in args.nodes.split(",")]:
+    for n in [int(x) for x in args.nodes.split(",") if x]:
         r = 2 * n
         for kind in args.solvers.split(","):
             per_driver = {}
@@ -175,9 +260,19 @@ def main(argv=None) -> None:
                 rows.append({"n": n, "solver": kind, key: round(sp, 2)})
                 print(f"  -> n={n} {kind}: scan is {sp:.2f}x the {baseline}")
 
+    if args.fast_nodes:
+        print("== fast solver stack vs PR-1 engine (steady state / iter) ==")
+        for n in [int(x) for x in args.fast_nodes.split(",") if x]:
+            try:
+                row = bench_fast(n, 2 * n, args.iters, args.seed)
+            except Exception as e:
+                row = {"n": n, "timing": "fast-compare", "error": str(e)}
+            rows.append(row)
+            print("  " + json.dumps(row))
+
     if args.batch > 1:
         print(f"== batched restarts (B={args.batch}) vs sequential solves ==")
-        for n in [int(x) for x in args.nodes.split(",")]:
+        for n in [int(x) for x in args.nodes.split(",") if x]:
             try:
                 row = bench_batched(n, 2 * n, args.batch, args.iters, args.seed)
             except Exception as e:

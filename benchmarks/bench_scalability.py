@@ -1,10 +1,19 @@
-"""Scalability across node counts — paper Table I.
+"""Scalability across node counts — paper Table I, plus large-n constraint
+scenarios on the fast solver stack.
 
 Asymptotic convergence factor + convergence time (consensus error ≤ 1e-4)
 for exponential vs U-EquiStatic vs BA-Topo, with BA-Topo's edge budget at
 half the exponential graph's degree sum (the paper's sparsity protocol).
 
+``--scenarios`` additionally runs the four heterogeneous constraint
+scenarios (node-level, intra-server n=8, BCube, pod-boundary) at
+``--scenario-nodes`` through the device-resident scan driver with the fast
+solver stack (inexact CG + fp32, DESIGN.md §9) — no host-side
+per-iteration syncs, which is what makes n = 256/512 tractable.
+
   PYTHONPATH=src python -m benchmarks.bench_scalability --nodes 4,8,16,32,64
+  PYTHONPATH=src python -m benchmarks.bench_scalability --nodes "" \
+      --scenarios node,intra,bcube,pod --scenario-nodes 256
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ import time
 import numpy as np
 
 from repro.core import make_baseline
+from repro.core.admm import ADMMConfig, HeterogeneousADMM
 from repro.core.consensus import simulate_consensus, time_to_error
 
 from .common import ba_topo, edge_b_min
@@ -53,6 +63,93 @@ def run(nodes: list[int], iters: int, sa_iters: int, seed: int,
     return rows
 
 
+def _scenario_instance(scenario: str, n: int):
+    """(cs, n_eff, r) for one constraint scenario at target size n."""
+    from repro.core.constraints import (bcube_constraints,
+                                        intra_server_constraints,
+                                        node_level_constraints,
+                                        pod_boundary_constraints)
+
+    if scenario == "node":
+        cs = node_level_constraints(n, np.full(n, 4), np.full(n, 9.76))
+        return cs, n, 2 * n
+    if scenario == "intra":  # the paper's 8-GPU server — n fixed by Fig. 3
+        return intra_server_constraints(), 8, 12
+    if scenario == "bcube":
+        # exact (p, k) factorization with p^k == n when one exists — the
+        # paper's p=4 preferred (256 → BCube(4,4)), else the smallest
+        # fitting p (512 → BCube(2,9)); otherwise the nearest power of 4,
+        # loudly
+        for p in (4, 2, 3, 5, 6, 7, 8):
+            k = round(np.log(n) / np.log(p))
+            if k >= 1 and p ** k == n:
+                break
+        else:
+            p, k = 4, max(1, round(np.log(n) / np.log(4)))
+            print(f"  [bcube] no p^k == {n} for p ≤ 8; "
+                  f"running BCube({p},{k}) with n={p**k} instead")
+        n_eff = p ** k
+        # level-0 at the paper's PIX rate, switch levels at the SYS rate
+        bw = tuple(4.88 if lay == 0 else 9.76 for lay in range(k))
+        return bcube_constraints(p, k, layer_bw=bw), n_eff, 2 * n_eff
+    if scenario == "pod":
+        cs = pod_boundary_constraints(n, pods=max(2, n // 128),
+                                      dci_cap_total=max(8, n // 16))
+        return cs, n, 2 * n
+    raise ValueError(f"unknown scenario {scenario!r}")
+
+
+def run_scenarios(scenarios: list[str], n_target: int, admm_iters: int,
+                  seed: int) -> list[dict]:
+    """Large-n heterogeneous solves on the scan driver + fast solver stack.
+
+    One warm start per scenario (greedy feasible graph — SA is host-side
+    O(iters·n³) and not what this benchmark measures), one scan-compiled
+    device call per solve; compile and steady-state times are reported
+    separately."""
+    from repro.core.api import _greedy_constraint_graph
+    from repro.core.graph import all_edges, edge_index
+
+    rows = []
+    for scenario in scenarios:
+        cs, n, r = _scenario_instance(scenario, n_target)
+        rng = np.random.default_rng(seed)
+        t0 = time.time()
+        edges0 = _greedy_constraint_graph(n, r, cs, rng)
+        t_warm = time.time() - t0
+        eidx = edge_index(n)
+        m = len(all_edges(n))
+        g0 = np.zeros(m)
+        for e in edges0:
+            g0[eidx[e]] = 1.0 / max(len(edges0), 1)
+        z0 = (g0 > 0).astype(np.float64)
+        cfg = ADMMConfig(max_iters=admm_iters,
+                         check_every=min(20, admm_iters),
+                         precond="jacobi", cg_inexact=True, dtype="float32")
+        solver = HeterogeneousADMM(
+            n, r, np.asarray(cs.M, np.float64), np.asarray(cs.e_cap, np.float64),
+            cfg, equality=cs.equality, edge_ok=np.asarray(cs.edge_ok))
+        t0 = time.time()
+        res = solver.solve(g0=g0, z0=z0, lam0=0.3)  # compile + run
+        t_first = time.time() - t0
+        t0 = time.time()
+        res = solver.solve(g0=g0, z0=z0, lam0=0.3)
+        t_solve = time.time() - t0
+        rows.append({
+            "scenario": cs.name, "n": n, "r": r, "q": int(cs.q),
+            "warm_start_s": round(t_warm, 2),
+            "compile_s": round(t_first - t_solve, 2),
+            "solve_s": round(t_solve, 2),
+            "ms_per_iter": round(t_solve / max(res.iters, 1) * 1e3, 1),
+            "admm_iters": res.iters,
+            "cg_per_step": round(res.cg_iters / max(res.iters, 1), 1),
+            "residual": float(res.residual),
+            "z_edges": int(res.z.sum()) if res.z is not None else None,
+        })
+        print("  " + json.dumps(rows[-1]))
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nodes", default="4,8,16,32,64")
@@ -60,17 +157,32 @@ def main(argv=None) -> None:
     ap.add_argument("--sa-iters", type=int, default=600)
     ap.add_argument("--restarts", type=int, default=1,
                     help="ADMM restarts, solved batched on device when > 1")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated constraint scenarios "
+                         "(node,intra,bcube,pod) to solve at --scenario-nodes")
+    ap.add_argument("--scenario-nodes", type=int, default=256)
+    ap.add_argument("--admm-iters", type=int, default=40,
+                    help="ADMM iterations for the --scenarios solves")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
-    nodes = [int(x) for x in args.nodes.split(",")]
+    nodes = [int(x) for x in args.nodes.split(",") if x]
 
-    print("== scalability (paper Table I) ==")
-    rows = run(nodes, args.iters, args.sa_iters, args.seed, args.restarts)
-    print(f"{'n':>5} {'topology':>14} {'edges':>6} {'r_asym':>7} {'t_conv_ms':>10}")
-    for r in rows:
-        print(f"{r['n']:>5} {r['topology']:>14} {r['edges']:>6} "
-              f"{r['r_asym']:>7} {r['t_converge_ms']:>10}")
+    rows = []
+    if nodes:
+        print("== scalability (paper Table I) ==")
+        rows = run(nodes, args.iters, args.sa_iters, args.seed, args.restarts)
+        print(f"{'n':>5} {'topology':>14} {'edges':>6} {'r_asym':>7} {'t_conv_ms':>10}")
+        for r in rows:
+            print(f"{r['n']:>5} {r['topology']:>14} {r['edges']:>6} "
+                  f"{r['r_asym']:>7} {r['t_converge_ms']:>10}")
+
+    if args.scenarios:
+        print(f"== constraint scenarios at n={args.scenario_nodes} "
+              f"(scan driver, fast solver stack) ==")
+        rows += run_scenarios([s for s in args.scenarios.split(",") if s],
+                              args.scenario_nodes, args.admm_iters, args.seed)
+
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(rows, f, indent=1)

@@ -24,9 +24,23 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (slow: ~1h)")
+    ap.add_argument("--json", default=None, metavar="BENCH_admm.json",
+                    help="run ONLY the tracked ADMM perf benchmark and write "
+                         "its machine-readable rows (n, solver, psd_backend, "
+                         "dtype, ms_per_iter, cg_per_step, r_asym, …) to this "
+                         "path — the perf trajectory file committed across PRs")
     args = ap.parse_args(argv)
     os.makedirs(ART, exist_ok=True)
     quick = not args.full
+
+    if args.json:
+        from . import bench_admm
+        # Fixed, quick configuration so rows stay comparable across PRs:
+        # backend×driver grid at n=16/32 + the fast-compare row at n=64.
+        bench_admm.main(["--nodes", "16,32", "--iters", "60",
+                         "--fast-nodes", "64", "--json-out", args.json])
+        print(f"tracked ADMM perf rows written to {args.json}")
+        return
 
     from . import (bench_admm, bench_compression, bench_consensus,
                    bench_dynamic, bench_kernels, bench_roofline,

@@ -71,6 +71,10 @@ class _ADMMBase:
                 f"unknown driver {self.cfg.driver!r}; expected 'scan' or 'python'")
         if self.spec.hetero and self.cfg.solver == "kkt_bicgstab_ilu":
             return replace(self.cfg, solver="schur_cg")
+        if self.cfg.solver == "kkt_bicgstab_ilu" and self.cfg.dtype != "float64":
+            raise ValueError(
+                "the scipy-ILU backend is float64-only; use solver='schur_cg' "
+                "with dtype='float32'")
         return self.cfg
 
     def _solve_state(self, state: ADMMState) -> ADMMResult:

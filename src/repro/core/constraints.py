@@ -63,26 +63,27 @@ class ConstraintSet:
         return self.M @ z.astype(np.int64)
 
 
+def _endpoint_arrays(edges) -> tuple[np.ndarray, np.ndarray]:
+    ei = np.fromiter((i for i, _ in edges), dtype=np.int64, count=len(edges))
+    ej = np.fromiter((j for _, j in edges), dtype=np.int64, count=len(edges))
+    return ei, ej
+
+
 def node_level_constraints(n: int, e_per_node: np.ndarray, b: np.ndarray) -> ConstraintSet:
     """§IV-B1: q = n rows, M = abs(A) (Eq. 16), e from Algorithm 1."""
     edges = all_edges(n)
     m = len(edges)
+    ei, ej = _endpoint_arrays(edges)
     M = np.zeros((n, m), dtype=np.int64)
-    for l, (i, j) in enumerate(edges):
-        M[i, l] = 1
-        M[j, l] = 1
+    M[ei, np.arange(m)] = 1
+    M[ej, np.arange(m)] = 1
     e_cap = np.asarray(e_per_node, dtype=np.int64)
     b = np.asarray(b, dtype=np.float64)
 
     def edge_bw(sel: np.ndarray) -> np.ndarray:
-        deg = M @ sel.astype(np.int64)
-        out = np.full(m, np.inf)
-        for l, (i, j) in enumerate(edges):
-            if sel[l]:
-                di = max(int(deg[i]), 1)
-                dj = max(int(deg[j]), 1)
-                out[l] = min(b[i] / di, b[j] / dj)
-        return out
+        deg = np.maximum(M @ sel.astype(np.int64), 1)
+        out = np.minimum(b[ei] / deg[ei], b[ej] / deg[ej])
+        return np.where(sel, out, np.inf)
 
     cs = ConstraintSet(
         n=n, M=M, e_cap=e_cap, equality=True, name="node-level",
@@ -128,18 +129,13 @@ def intra_server_constraints(
             return 4 + i // 4  # NODE row 4..5
         return 6  # SYS
 
-    for l, (i, j) in enumerate(edges):
-        M[tier(i, j), l] = 1
+    edge_tier = np.array([tier(i, j) for i, j in edges], dtype=np.int64)
+    M[edge_tier, np.arange(m)] = 1
     bw = np.array([b_pix] * 4 + [b_node] * 2 + [b_sys])
 
     def edge_bw(sel: np.ndarray) -> np.ndarray:
-        load = M @ sel.astype(np.int64)
-        out = np.full(m, np.inf)
-        for l in range(m):
-            if sel[l]:
-                t = int(np.argmax(M[:, l]))
-                out[l] = bw[t] / max(int(load[t]), 1)
-        return out
+        load = np.maximum(M @ sel.astype(np.int64), 1)
+        return np.where(sel, bw[edge_tier] / load[edge_tier], np.inf)
 
     cs = ConstraintSet(
         n=n, M=M, e_cap=np.asarray(caps, dtype=np.int64), equality=False,
@@ -184,23 +180,23 @@ def bcube_constraints(p: int = 4, k: int = 2, layer_bw: tuple[float, ...] = (4.8
         M[lay * n + j, l] = 1
     e_cap = np.full(q, p - 1, dtype=np.int64)
     bw = np.concatenate([np.full(n, layer_bw[lay]) for lay in range(k)])
+    # an admissible layer-l edge {i, j} consumes ports l·n+i and l·n+j
+    ei, ej = _endpoint_arrays(edges)
+    lay0 = np.maximum(edge_layer, 0)  # sentinel −1 → row 0 (masked below)
+    port_i = lay0 * n + ei
+    port_j = lay0 * n + ej
 
     def edge_bw(sel: np.ndarray) -> np.ndarray:
-        load = M @ sel.astype(np.int64)
-        out = np.full(m, np.inf)
-        for l in range(m):
-            if sel[l] and edge_ok[l]:
-                ports = np.nonzero(M[:, l])[0]
-                out[l] = min(bw[t] / max(int(load[t]), 1) for t in ports)
-        return out
+        load = np.maximum(M @ sel.astype(np.int64), 1)
+        out = np.minimum(bw[port_i] / load[port_i], bw[port_j] / load[port_j])
+        return np.where(sel & edge_ok, out, np.inf)
 
     cs = ConstraintSet(
         n=n, M=M, e_cap=e_cap, equality=False, name=f"bcube(p={p},k={k})",
         edge_ok=edge_ok, resource_bw=bw,
     )
     cs.edge_bandwidth = edge_bw
-    cs_meta_layer = edge_layer  # kept for tests via attribute
-    cs.edge_layer = cs_meta_layer  # type: ignore[attr-defined]
+    cs.edge_layer = edge_layer  # type: ignore[attr-defined]  # kept for tests
     return cs
 
 
@@ -221,27 +217,24 @@ def pod_boundary_constraints(
     m = len(edges)
     per_pod = n // pods
     q = n + 1
+    ei, ej = _endpoint_arrays(edges)
+    intra = (ei // per_pod) == (ej // per_pod)
     M = np.zeros((q, m), dtype=np.int64)
-    for l, (i, j) in enumerate(edges):
-        if i // per_pod == j // per_pod:
-            M[i, l] = 1
-            M[j, l] = 1
-        else:
-            M[n, l] = 1
+    cols = np.arange(m)
+    M[ei[intra], cols[intra]] = 1
+    M[ej[intra], cols[intra]] = 1
+    M[n, cols[~intra]] = 1
     e_cap = np.concatenate([np.full(n, ici_cap_per_node), [dci_cap_total]]).astype(np.int64)
     bw = np.concatenate([np.full(n, ici_bw), [dci_bw]])
 
     def edge_bw(sel: np.ndarray) -> np.ndarray:
-        load = M @ sel.astype(np.int64)
-        out = np.full(m, np.inf)
-        for l, (i, j) in enumerate(edges):
-            if not sel[l]:
-                continue
-            if i // per_pod == j // per_pod:
-                out[l] = min(ici_bw / max(int(load[i]), 1), ici_bw / max(int(load[j]), 1))
-            else:
-                out[l] = dci_bw / max(int(load[n]), 1)
-        return out
+        load = np.maximum(M @ sel.astype(np.int64), 1)
+        out = np.where(
+            intra,
+            np.minimum(ici_bw / load[ei], ici_bw / load[ej]),
+            dci_bw / load[n],
+        )
+        return np.where(sel, out, np.inf)
 
     cs = ConstraintSet(
         n=n, M=M, e_cap=e_cap, equality=False, name=f"pod-boundary(pods={pods})",

@@ -42,17 +42,31 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..kernels.edge_laplacian import ops as _el_ops
 from .graph import all_edges
-from .linalg import ILUKKTSolver, kkt_bicgstab_solve, schur_cg_solve
+from .linalg import ILUKKTSolver, kkt_bicgstab_solve, pcg_solve
 
+# Enables the 64-bit dtype set; the solver precision actually used is a
+# per-ProblemSpec choice (``ADMMConfig.dtype`` → ``ProblemSpec.dtype``),
+# NOT a global default — fp32 specs stay fp32 end-to-end (DESIGN.md §9).
 jax.config.update("jax_enable_x64", True)
 
 __all__ = [
     "ADMMConfig", "ADMMResult", "ADMMState", "ProblemSpec",
     "make_homo_spec", "make_hetero_spec", "init_state", "step",
     "solve_spec", "solve_python", "solve_batched_spec", "solve_sweep_spec",
-    "proj_psd", "proj_card_nonneg", "proj_binary_topr", "build_sparse_A",
+    "proj_psd", "proj_psd_ns", "proj_card_nonneg", "proj_binary_topr",
+    "jacobi_diag", "build_sparse_A",
 ]
+
+# Inexact-ADMM CG tolerance schedule (DESIGN.md §9): relative tolerance
+# η·√(previous squared primal residual), clipped to [cg_tol, cap] — loose
+# while the splitting is far from consensus, tight near convergence.
+INEXACT_ETA = 1e-2
+INEXACT_CAP = 1e-3
+# Relative CG tolerances below ~machine-ε are unreachable in fp32 and only
+# burn ``cg_maxiter`` iterations per step; floor the request there.
+FP32_TOL_FLOOR = 1e-6
 
 
 @dataclass
@@ -67,6 +81,17 @@ class ADMMConfig:
     cg_maxiter: int = 3000
     check_every: int = 10
     verbose: bool = False
+    # -- solver performance stack (DESIGN.md §9) ----------------------------
+    # NOTE: "none" is the measured-best default — the Schur complement is
+    # identity-plus-structured-low-rank with a block-constant diagonal, so
+    # Jacobi scaling splits its unit eigenvalue cluster and *costs* CG
+    # iterations (~1.5–2.5×) on every paper scenario; see DESIGN.md §9.
+    precond: str = "none"         # jacobi | none — Schur-complement CG preconditioner
+    cg_inexact: bool = False      # adaptive CG tolerance tied to the primal residual
+    psd_backend: str = "eigh"     # eigh (exact) | newton_schulz (matmul-only)
+    psd_iters: int = 30           # Newton–Schulz sign iterations
+    dtype: str = "float64"        # float64 | float32 (fp32 loop, fp64 residuals)
+    edge_kernel: bool = False     # route L(g)/quadform through the Pallas pair
 
 
 @dataclass
@@ -78,6 +103,7 @@ class ADMMResult:
     iters: int
     residual: float
     history: list = field(default_factory=list)
+    cg_iters: int = 0      # cumulative X-step CG iterations (schur_cg only)
 
 
 # =========================================================================
@@ -86,8 +112,11 @@ class ADMMResult:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("r", "rho", "edge_ok", "c", "ei", "ej", "B0", "I", "M", "e_cap"),
-    meta_fields=("n", "m", "q", "hetero", "equality", "cg_tol", "cg_maxiter"),
+    data_fields=("r", "rho", "edge_ok", "c", "ei", "ej", "B0", "I", "M", "e_cap",
+                 "jd", "lidx"),
+    meta_fields=("n", "m", "q", "hetero", "equality", "cg_tol", "cg_maxiter",
+                 "dtype", "psd_backend", "psd_iters", "cg_inexact",
+                 "edge_kernel"),
 )
 @dataclass(frozen=True)
 class ProblemSpec:
@@ -109,7 +138,7 @@ class ProblemSpec:
     cg_maxiter: int
     # -- array leaves -------------------------------------------------------
     r: jnp.ndarray            # scalar int64 — cardinality budget
-    rho: jnp.ndarray          # scalar float64 — ADMM penalty
+    rho: jnp.ndarray          # scalar — ADMM penalty (spec dtype)
     edge_ok: jnp.ndarray      # (m,) bool admissibility mask
     c: jnp.ndarray            # (m+1,) objective: minimize −λ̃
     ei: jnp.ndarray           # (m,) edge endpoints i < j
@@ -118,6 +147,14 @@ class ProblemSpec:
     I: jnp.ndarray            # (n, n)
     M: jnp.ndarray | None     # (q, m) capacity rows (hetero only)
     e_cap: jnp.ndarray | None # (q,) capacities (hetero only)
+    # -- solver performance stack (DESIGN.md §9) ----------------------------
+    jd: tuple | None = None   # diag(A Aᵀ) constraint-tree (Jacobi precond)
+    lidx: jnp.ndarray | None = None  # (n, n) packed edge index; diag → m
+    dtype: str = "float64"    # scan-loop/CG dtype; residuals always fp64
+    psd_backend: str = "eigh"
+    psd_iters: int = 30
+    cg_inexact: bool = False
+    edge_kernel: bool = False
 
     def replace(self, **kw) -> "ProblemSpec":
         return dataclasses.replace(self, **kw)
@@ -125,12 +162,16 @@ class ProblemSpec:
 
 class ADMMState(NamedTuple):
     """One ADMM iterate. Block tuples have 4 entries (homo: x, S, y, T) or
-    7 (hetero: + z, ν, s); structure is fixed by the spec's ``hetero`` flag."""
+    7 (hetero: + z, ν, s); structure is fixed by the spec's ``hetero`` flag.
+    ``res``/``cg`` carry the previous squared primal residual (feeds the
+    inexact-CG tolerance schedule) and the cumulative CG iteration count."""
 
     X: tuple   # primal blocks
     Y: tuple   # projected blocks (Y / Y′)
     D: tuple   # scaled duals
     lam: tuple # constraint-space multipliers (X-step warm start)
+    res: jnp.ndarray  # previous iteration's squared primal residual (f64)
+    cg: jnp.ndarray   # cumulative X-step CG iterations (int32)
 
 
 def _edge_arrays(n: int):
@@ -140,46 +181,114 @@ def _edge_arrays(n: int):
     return edges, ei, ej
 
 
+def _packed_edge_index(n: int) -> jnp.ndarray:
+    """(n, n) int32 map from (a, b) to the packed index of edge {a, b} in
+    ``all_edges(n)`` order; the diagonal maps to the sentinel m (a zero slot
+    appended to the weight vector). ``np.triu_indices`` enumerates the upper
+    triangle row-major — the same lexicographic order as ``all_edges``."""
+    m = n * (n - 1) // 2
+    lidx = np.full((n, n), m, dtype=np.int32)
+    iu = np.triu_indices(n, 1)
+    lidx[iu] = np.arange(m, dtype=np.int32)
+    lidx.T[iu] = np.arange(m, dtype=np.int32)
+    return jnp.asarray(lidx)
+
+
+def jacobi_diag(n: int, ei, ej, dtype, M=None, equality: bool = True):
+    """Analytic diag(A Aᵀ) of the constraint operator, as a constraint-tree.
+
+    Derived row-wise from the edge incidence structure (no materialization):
+      - B̃∓ rows (P/Q blocks): entry (a,b) sums the squared coefficients of
+        the primal unknowns appearing in ``L(g)[a,b] ∓ λ̃δ_ab + S/T[a,b]`` —
+        1 per candidate edge {a,b} off-diagonal, deg(a) + 1 (λ̃) on the
+        diagonal, + 1 for the slack block S/T.
+      - D rows (w block): deg(a) ones from diag(L) + 1 for y.
+      - capacity rows (u, hetero): ‖M_t‖² (+1 for the slack s when the
+        constraint is an inequality).
+      - coupling rows (v, hetero): g − z + ν → 1 + 1 + 1 = 3.
+    """
+    ei = jnp.asarray(ei)
+    ej = jnp.asarray(ej)
+    m = int(ei.shape[0])
+    deg = jnp.zeros(n, dtype=dtype).at[ei].add(1.0).at[ej].add(1.0)
+    C = jnp.zeros((n, n), dtype=dtype).at[ei, ej].add(1.0).at[ej, ei].add(1.0)
+    diag = jnp.arange(n)
+    dP = (C + 1.0).at[diag, diag].add(deg + 1.0)
+    dw = deg + 1.0
+    if M is None:
+        return (dP, dP, dw)
+    Mj = jnp.asarray(M, dtype=dtype)
+    du = jnp.sum(Mj * Mj, axis=1) + (0.0 if equality else 1.0)
+    du = jnp.maximum(du, jnp.asarray(1e-12, dtype))  # guard all-zero rows
+    dv = jnp.full(m, 3.0, dtype=dtype)
+    return (dP, dP, dw, du, dv)
+
+
+def _validate_cfg(cfg: ADMMConfig) -> None:
+    """Reject typo'd solver-stack selectors (a silently-ignored
+    ``precond="Jacobi"`` would benchmark the wrong configuration)."""
+    if cfg.precond not in ("jacobi", "none"):
+        raise ValueError(f"unknown precond {cfg.precond!r}; expected 'jacobi' or 'none'")
+    if cfg.psd_backend not in ("eigh", "newton_schulz"):
+        raise ValueError(f"unknown psd_backend {cfg.psd_backend!r}; "
+                         "expected 'eigh' or 'newton_schulz'")
+    if cfg.dtype not in ("float64", "float32"):
+        raise ValueError(f"unknown dtype {cfg.dtype!r}; expected 'float64' or 'float32'")
+
+
 def make_homo_spec(n: int, r: int, cfg: ADMMConfig,
                    edge_ok: np.ndarray | None = None) -> ProblemSpec:
+    _validate_cfg(cfg)
     _, ei, ej = _edge_arrays(n)
     m = ei.shape[0]
+    dt = jnp.dtype(cfg.dtype)
     ok = jnp.ones(m, dtype=bool) if edge_ok is None else jnp.asarray(edge_ok, dtype=bool)
     r_eff = min(int(r), int(np.asarray(ok).sum()))
     return ProblemSpec(
         n=n, m=m, q=0, hetero=False, equality=True,
         cg_tol=cfg.cg_tol, cg_maxiter=cfg.cg_maxiter,
         r=jnp.asarray(r_eff, dtype=jnp.int64),
-        rho=jnp.asarray(cfg.rho, dtype=jnp.float64),
+        rho=jnp.asarray(cfg.rho, dtype=dt),
         edge_ok=ok,
-        c=jnp.zeros(m + 1).at[m].set(-1.0),
+        c=jnp.zeros(m + 1, dtype=dt).at[m].set(-1.0),
         ei=ei, ej=ej,
-        B0=cfg.alpha * jnp.ones((n, n)) / n,
-        I=jnp.eye(n),
+        B0=cfg.alpha * jnp.ones((n, n), dtype=dt) / n,
+        I=jnp.eye(n, dtype=dt),
         M=None, e_cap=None,
+        jd=jacobi_diag(n, ei, ej, dt) if cfg.precond == "jacobi" else None,
+        lidx=_packed_edge_index(n),
+        dtype=cfg.dtype, psd_backend=cfg.psd_backend, psd_iters=cfg.psd_iters,
+        cg_inexact=cfg.cg_inexact, edge_kernel=cfg.edge_kernel,
     )
 
 
 def make_hetero_spec(n: int, r: int, M: np.ndarray, e_cap: np.ndarray,
                      cfg: ADMMConfig, equality: bool = True,
                      edge_ok: np.ndarray | None = None) -> ProblemSpec:
+    _validate_cfg(cfg)
     _, ei, ej = _edge_arrays(n)
     m = int(ei.shape[0])
     assert M.shape[1] == m, f"M must cover all {m} candidate edges"
+    dt = jnp.dtype(cfg.dtype)
     ok = jnp.ones(m, dtype=bool) if edge_ok is None else jnp.asarray(edge_ok, dtype=bool)
     r_eff = min(int(r), int(np.asarray(ok).sum()))
     return ProblemSpec(
         n=n, m=m, q=int(M.shape[0]), hetero=True, equality=equality,
         cg_tol=cfg.cg_tol, cg_maxiter=cfg.cg_maxiter,
         r=jnp.asarray(r_eff, dtype=jnp.int64),
-        rho=jnp.asarray(cfg.rho, dtype=jnp.float64),
+        rho=jnp.asarray(cfg.rho, dtype=dt),
         edge_ok=ok,
-        c=jnp.zeros(m + 1).at[m].set(-1.0),
+        c=jnp.zeros(m + 1, dtype=dt).at[m].set(-1.0),
         ei=ei, ej=ej,
-        B0=cfg.alpha * jnp.ones((n, n)) / n,
-        I=jnp.eye(n),
-        M=jnp.asarray(M, dtype=jnp.float64),
-        e_cap=jnp.asarray(e_cap, dtype=jnp.float64),
+        B0=cfg.alpha * jnp.ones((n, n), dtype=dt) / n,
+        I=jnp.eye(n, dtype=dt),
+        M=jnp.asarray(M, dtype=dt),
+        e_cap=jnp.asarray(e_cap, dtype=dt),
+        jd=(jacobi_diag(n, ei, ej, dt, M=M, equality=equality)
+            if cfg.precond == "jacobi" else None),
+        lidx=_packed_edge_index(n),
+        dtype=cfg.dtype, psd_backend=cfg.psd_backend, psd_iters=cfg.psd_iters,
+        cg_inexact=cfg.cg_inexact, edge_kernel=cfg.edge_kernel,
     )
 
 
@@ -193,6 +302,30 @@ def proj_psd(M: jnp.ndarray, sign: float) -> jnp.ndarray:
     ev, U = jnp.linalg.eigh(Msym)
     ev = jnp.maximum(ev, 0.0) if sign > 0 else jnp.minimum(ev, 0.0)
     return (U * ev) @ U.T
+
+
+def proj_psd_ns(M: jnp.ndarray, sign: float, iters: int = 30) -> jnp.ndarray:
+    """Matmul-only PSD/NSD projection via Newton–Schulz polar iteration.
+
+    P_±(M) = (M ± |M|)/2 with |M| = sign(M)·M; the matrix sign is iterated
+    as X ← (3X − X³)/2 from X₀ = M/‖M‖_F (Frobenius normalization bounds
+    the spectral radius by 1, the iteration's convergence region). Two n³
+    matmuls per iteration, no eigendecomposition — MXU-friendly where
+    ``eigh`` serializes. Deviation from the exact projection is O(|λ|) for
+    eigenvalues |λ|/‖M‖_F ≲ 1.5^{−iters} (the sign iterate has not
+    saturated there); the parity test bounds it empirically.
+    """
+    Msym = (M + M.T) / 2.0
+    nrm = jnp.sqrt(jnp.sum(Msym * Msym)) + jnp.asarray(1e-30, Msym.dtype)
+    Y = Msym / nrm
+
+    def body(_, X):
+        return 1.5 * X - 0.5 * (X @ X @ X)
+
+    X = lax.fori_loop(0, iters, body, Y)
+    absM = nrm * (X @ Y)
+    absM = (absM + absM.T) / 2.0
+    return (Msym + absM) / 2.0 if sign > 0 else (Msym - absM) / 2.0
 
 
 def proj_card_nonneg(v: jnp.ndarray, r, ok: jnp.ndarray) -> jnp.ndarray:
@@ -233,6 +366,22 @@ def proj_binary_topr(v: jnp.ndarray, r, ok: jnp.ndarray) -> jnp.ndarray:
 # =========================================================================
 
 def _L_of_g(spec: ProblemSpec, g: jnp.ndarray) -> jnp.ndarray:
+    """Laplacian of the packed edge-weight vector.
+
+    Default: the fused gather form — unpack g through the precomputed
+    packed-index map ``spec.lidx`` (diagonal hits the appended zero slot)
+    and assemble L = Diag(G·1) − G in one pass. This is the same math the
+    ``edge_laplacian`` Pallas kernel runs tile-wise; as pure JAX it replaces
+    the seed's 4 scatter-adds, which XLA:CPU serializes (~40× slower at
+    n=128). ``spec.edge_kernel`` routes to the Pallas pair instead; specs
+    without ``lidx`` keep the scatter fallback.
+    """
+    if spec.edge_kernel:
+        return _el_ops.edge_laplacian(g, spec.ei, spec.ej, spec.n)
+    if spec.lidx is not None:
+        g_ext = jnp.concatenate([g, jnp.zeros(1, dtype=g.dtype)])
+        G = g_ext[spec.lidx]
+        return jnp.diag(jnp.sum(G, axis=1)) - G
     ei, ej = spec.ei, spec.ej
     L = jnp.zeros((spec.n, spec.n), dtype=g.dtype)
     L = L.at[ei, ej].add(-g).at[ej, ei].add(-g)
@@ -242,6 +391,8 @@ def _L_of_g(spec: ProblemSpec, g: jnp.ndarray) -> jnp.ndarray:
 
 def _edge_quadform(spec: ProblemSpec, P: jnp.ndarray) -> jnp.ndarray:
     """⟨∂L/∂g_l, P⟩ = P_ii + P_jj − P_ij − P_ji per edge l = {i, j}."""
+    if spec.edge_kernel:
+        return _el_ops.edge_quadform(P, spec.ei, spec.ej)
     ei, ej = spec.ei, spec.ej
     return P[ei, ei] + P[ej, ej] - P[ei, ej] - P[ej, ei]
 
@@ -283,10 +434,11 @@ def AT_op(spec: ProblemSpec, lamv):
 
 
 def b_rhs(spec: ProblemSpec):
-    base = (-spec.B0, 2.0 * spec.I, jnp.ones(spec.n))
+    dt = spec.B0.dtype
+    base = (-spec.B0, 2.0 * spec.I, jnp.ones(spec.n, dtype=dt))
     if not spec.hetero:
         return base
-    return base + (spec.e_cap, jnp.zeros(spec.m))
+    return base + (spec.e_cap, jnp.zeros(spec.m, dtype=dt))
 
 
 # =========================================================================
@@ -296,13 +448,17 @@ def b_rhs(spec: ProblemSpec):
 def _project_blocks(spec: ProblemSpec, U):
     """Y-update (Eq. 24 / Eq. 30): per-block Euclidean projections."""
     m = spec.m
+    if spec.psd_backend == "newton_schulz":
+        psd = partial(proj_psd_ns, iters=spec.psd_iters)
+    else:
+        psd = proj_psd
     x1 = jnp.concatenate([
         proj_card_nonneg(U[0][:m], spec.r, spec.edge_ok),
         jnp.maximum(U[0][m], 0.0)[None],
     ])
-    S1 = proj_psd(U[1], sign=-1.0)
+    S1 = psd(U[1], sign=-1.0)
     y1 = jnp.maximum(U[2], 0.0)
-    T1 = proj_psd(U[3], sign=+1.0)
+    T1 = psd(U[3], sign=+1.0)
     if not spec.hetero:
         return (x1, S1, y1, T1)
     z1 = proj_binary_topr(U[4], spec.r, spec.edge_ok)
@@ -321,11 +477,27 @@ def _xstep_target(spec: ProblemSpec, Y, D):
     return V
 
 
+def _cg_tolerance(spec: ProblemSpec, prev_res):
+    """Per-iteration relative CG tolerance (DESIGN.md §9).
+
+    Exact mode: ``cg_tol``, floored at what the spec dtype can resolve.
+    Inexact mode: η·√(previous squared primal residual), clipped to
+    [floored cg_tol, cap] — the first iteration (res = ∞) starts at the cap.
+    """
+    floor = FP32_TOL_FLOOR if jnp.dtype(spec.dtype) == jnp.float32 else 0.0
+    tol0 = max(spec.cg_tol, floor)
+    if not spec.cg_inexact:
+        return tol0
+    cap = max(INEXACT_CAP, tol0)
+    return jnp.clip(INEXACT_ETA * jnp.sqrt(prev_res), tol0, cap)
+
+
 def step(spec: ProblemSpec, state: ADMMState, backend: str = "schur_cg"):
     """One ADMM iteration: Y-projection, X-step KKT solve, dual update.
 
     Pure and jittable for the JAX backends; ``vmap``/``scan`` compose over
-    it. Returns ``(new_state, squared primal residual)``.
+    it. Returns ``(new_state, squared primal residual)``; the residual is
+    always accumulated in float64, whatever the spec dtype.
     """
     rho = spec.rho
     U = tuple(jax.tree.map(lambda x, d: x + d / rho, state.X, state.D))
@@ -333,12 +505,15 @@ def step(spec: ProblemSpec, state: ADMMState, backend: str = "schur_cg"):
     V = _xstep_target(spec, Y, state.D)
     A = partial(A_op, spec)
     AT = partial(AT_op, spec)
+    tol = _cg_tolerance(spec, state.res)
+    cg_it = jnp.asarray(0, jnp.int32)
     if backend == "schur_cg":
-        Xn, lam = schur_cg_solve(A, AT, V, b_rhs(spec), state.lam,
-                                 tol=spec.cg_tol, maxiter=spec.cg_maxiter)
+        Xn, lam, cg_it = pcg_solve(A, AT, V, b_rhs(spec), state.lam,
+                                   jd=spec.jd, tol=tol,
+                                   maxiter=spec.cg_maxiter)
     elif backend == "kkt_bicgstab":
         Xn, lam = kkt_bicgstab_solve(A, AT, V, b_rhs(spec), state.X, state.lam,
-                                     tol=spec.cg_tol, maxiter=spec.cg_maxiter)
+                                     tol=tol, maxiter=spec.cg_maxiter)
     else:
         raise ValueError(f"unknown device backend {backend!r}")
     Xn = tuple(Xn)
@@ -347,38 +522,44 @@ def step(spec: ProblemSpec, state: ADMMState, backend: str = "schur_cg"):
     D = tuple(jax.tree.map(lambda d, xn, y1: d + rho * (xn - y1), state.D, Xn, Y))
     res = jax.tree.reduce(
         lambda a, b: a + b,
-        jax.tree.map(lambda xn, y1: jnp.sum((xn - y1) ** 2), Xn, Y),
+        jax.tree.map(lambda xn, y1: jnp.sum((xn - y1).astype(jnp.float64) ** 2),
+                     Xn, Y),
     )
-    return ADMMState(X=Xn, Y=Y, D=D, lam=tuple(lam)), res
+    return ADMMState(X=Xn, Y=Y, D=D, lam=tuple(lam), res=res,
+                     cg=state.cg + cg_it), res
 
 
 def init_state(spec: ProblemSpec, g: jnp.ndarray, lam0,
                z: jnp.ndarray | None = None) -> ADMMState:
     """Initial iterate from a warm start. Pure JAX — composes with vmap."""
     n, m = spec.n, spec.m
-    g = jnp.asarray(g, dtype=jnp.float64)
-    lam0 = jnp.asarray(lam0, dtype=jnp.float64)
+    dt = jnp.dtype(spec.dtype)
+    g = jnp.asarray(g, dtype=dt)
+    lam0 = jnp.asarray(lam0, dtype=dt)
     x = jnp.concatenate([g, lam0[None]])
     L = _L_of_g(spec, g)
     S = -(L - lam0 * spec.I + spec.B0)
     T = 2 * spec.I - (L + lam0 * spec.I)
     y = 1.0 - jnp.diag(L)
-    zn2 = jnp.zeros((n, n))
+    zn2 = jnp.zeros((n, n), dtype=dt)
+    res0 = jnp.asarray(jnp.inf, jnp.float64)
+    cg0 = jnp.asarray(0, jnp.int32)
     if not spec.hetero:
         X = (x, S, y, T)
-        D = (jnp.zeros(m + 1), zn2, jnp.zeros(n), zn2)
-        lam = (zn2, zn2, jnp.zeros(n))
-        return ADMMState(X=X, Y=X, D=D, lam=lam)
+        D = (jnp.zeros(m + 1, dtype=dt), zn2, jnp.zeros(n, dtype=dt), zn2)
+        lam = (zn2, zn2, jnp.zeros(n, dtype=dt))
+        return ADMMState(X=X, Y=X, D=D, lam=lam, res=res0, cg=cg0)
     q = spec.q
-    z = (g > 0).astype(jnp.float64) if z is None else jnp.asarray(z, dtype=jnp.float64)
+    z = (g > 0).astype(dt) if z is None else jnp.asarray(z, dtype=dt)
     nu = z - g
-    s = (jnp.zeros(q) if spec.equality
+    s = (jnp.zeros(q, dtype=dt) if spec.equality
          else jnp.maximum(spec.e_cap - spec.M @ z, 0.0))
     X = (x, S, y, T, z, nu, s)
-    D = (jnp.zeros(m + 1), zn2, jnp.zeros(n), zn2,
-         jnp.zeros(m), jnp.zeros(m), jnp.zeros(q))
-    lam = (zn2, zn2, jnp.zeros(n), jnp.zeros(q), jnp.zeros(m))
-    return ADMMState(X=X, Y=X, D=D, lam=lam)
+    D = (jnp.zeros(m + 1, dtype=dt), zn2, jnp.zeros(n, dtype=dt), zn2,
+         jnp.zeros(m, dtype=dt), jnp.zeros(m, dtype=dt), jnp.zeros(q, dtype=dt))
+    lam = (zn2, zn2, jnp.zeros(n, dtype=dt), jnp.zeros(q, dtype=dt),
+           jnp.zeros(m, dtype=dt))
+    return ADMMState(X=X, Y=X, D=D, lam=lam, res=res0, cg=cg0)
 
 
 # =========================================================================
@@ -461,6 +642,7 @@ def _result_from(spec: ProblemSpec, st: ADMMState, iters, res, history) -> ADMMR
         g=np.asarray(x1[:m]), g_raw=np.asarray(x[:m]), lam_tilde=float(x1[m]),
         z=np.asarray(st.Y[4]) if spec.hetero else None,
         iters=int(iters), residual=float(res), history=history,
+        cg_iters=int(st.cg),
     )
 
 
@@ -510,7 +692,7 @@ def solve_sweep_spec(spec: ProblemSpec, rs, states: ADMMState, cfg: ADMMConfig,
     the whole sweep."""
     rs = jnp.asarray(rs, dtype=jnp.int64)
     rhos = (jnp.broadcast_to(spec.rho, rs.shape) if rhos is None
-            else jnp.asarray(rhos, dtype=jnp.float64))
+            else jnp.asarray(rhos, dtype=jnp.dtype(spec.dtype)))
     max_iters, chunk = _chunk_plan(cfg)
     sts, its, ress, hists = _solve_device_sweep(
         spec, rs, rhos, states, max_iters=max_iters, check_every=chunk,
@@ -617,6 +799,8 @@ def make_ilu_step(spec: ProblemSpec, ilu: ILUKKTSolver | None = None):
     interface as the jitted unified step. Homogeneous problem only."""
     if spec.hetero:
         raise ValueError("the ILU backend supports the homogeneous problem only")
+    if spec.dtype != "float64":
+        raise ValueError("the scipy-ILU backend requires dtype='float64'")
     if ilu is None:
         edges = all_edges(spec.n)
         ilu = ILUKKTSolver(build_sparse_A(spec.n, spec.m, edges))
@@ -634,6 +818,7 @@ def make_ilu_step(spec: ProblemSpec, ilu: ILUKKTSolver | None = None):
         D = tuple(jax.tree.map(lambda d, xn, y1: d + rho * (xn - y1),
                                state.D, Xn, Y))
         res = sum(float(jnp.sum((xn - y1) ** 2)) for xn, y1 in zip(Xn, Y))
-        return ADMMState(X=Xn, Y=Y, D=D, lam=state.lam), res
+        return ADMMState(X=Xn, Y=Y, D=D, lam=state.lam,
+                         res=jnp.asarray(res, jnp.float64), cg=state.cg), res
 
     return step_ilu

@@ -5,26 +5,111 @@ The X-step solves the KKT system (Eq. 27 / 31):
     [[I, Aᵀ], [A, 0]] [X; λ] = [V; b]        ⇔    X = V − Aᵀλ,  (A Aᵀ) λ = A V − b
 
 Backends:
-  - ``schur_cg``        (default, beyond paper): matrix-free CG on the SPD
-    Schur complement A Aᵀ — pure JAX, jittable, O(n² + |E|) per matvec.
+  - ``pcg_solve``       (default, beyond paper): matrix-free preconditioned
+    CG on the SPD Schur complement A Aᵀ — pure JAX, jittable, O(n² + |E|)
+    per matvec, optional Jacobi (diagonal) preconditioner and a traced
+    relative tolerance (the inexact-ADMM schedule feeds it). Returns the
+    iteration count so drivers can account CG work.
+  - ``schur_cg_solve``  : the PR-1 wrapper over ``jax.scipy`` CG, kept for
+    API compatibility (no preconditioner, no iteration count).
   - ``kkt_bicgstab``    : matrix-free Bi-CGSTAB on the indefinite KKT system,
     pure JAX — the paper's iterative method without preconditioning.
   - ``kkt_bicgstab_ilu``: paper-faithful — materialize the sparse KKT matrix
     once (CSC), precompute ILU (scipy ``spilu``), use it as a Bi-CGSTAB
     preconditioner [37, 38, 39].
+
+This module performs no global precision mutation: the solve runs in
+whatever dtype the operand pytrees carry (``ProblemSpec.dtype`` decides),
+while CG inner products/norms accumulate in float64 for a trustworthy
+stopping rule even in the float32 mode. The ``jax_enable_x64`` switch
+lives with the engine (it only widens the available dtype set; per-spec
+dtypes pick what is actually used).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-jax.config.update("jax_enable_x64", True)
+__all__ = ["pcg_solve", "schur_cg_solve", "kkt_bicgstab_solve", "ILUKKTSolver"]
 
-__all__ = ["schur_cg_solve", "kkt_bicgstab_solve", "ILUKKTSolver"]
+
+def _tdot(a, b) -> jnp.ndarray:
+    """Pytree inner product, accumulated in float64 (stable fp32-mode CG)."""
+    parts = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float64) * y.astype(jnp.float64)), a, b)
+    )
+    return sum(parts[1:], parts[0])
+
+
+def _axpy(alpha, x, y):
+    """x + alpha·y with the scalar cast to each leaf dtype (no f64 upcast
+    of an fp32 tree through scalar promotion)."""
+    return jax.tree.map(lambda xl, yl: xl + alpha.astype(xl.dtype) * yl, x, y)
+
+
+def pcg_solve(
+    A_op: Callable,
+    AT_op: Callable,
+    V,
+    b,
+    lam0,
+    jd=None,
+    tol=1e-10,
+    maxiter: int = 2000,
+):
+    """Solve X = V − Aᵀλ with (A Aᵀ)λ = A V − b via preconditioned CG.
+
+    ``jd``: optional pytree matching the constraint space holding
+    diag(A Aᵀ) (the analytic Jacobi diagonal from the edge incidence
+    structure — see ``engine.jacobi_diag``); ``None`` disables
+    preconditioning. ``tol`` is a *relative* residual tolerance and may be
+    a traced scalar (the inexact-ADMM schedule). Stops when
+    ‖r‖ ≤ tol·‖rhs‖ or after ``maxiter`` iterations.
+
+    Returns ``(X, λ, iters)``.
+    """
+
+    def matvec(lam):
+        return A_op(AT_op(lam))
+
+    if jd is None:
+        Minv = lambda r: r  # noqa: E731
+    else:
+        Minv = lambda r: jax.tree.map(lambda rl, dl: rl / dl, r, jd)  # noqa: E731
+
+    rhs = jax.tree.map(lambda av, bb: av - bb, A_op(V), b)
+    bb = _tdot(rhs, rhs)
+    r0 = jax.tree.map(lambda rh, ax: rh - ax, rhs, matvec(lam0))
+    z0 = Minv(r0)
+    rz0 = _tdot(r0, z0)
+    rr0 = _tdot(r0, r0)
+    tol2bb = jnp.asarray(tol, jnp.float64) ** 2 * bb
+
+    def cond(carry):
+        _, r, _, _, rr, rz, k = carry
+        return (rr > tol2bb) & (k < maxiter)
+
+    def body(carry):
+        x, r, z, p, rr, rz, k = carry
+        Ap = matvec(p)
+        alpha = rz / _tdot(p, Ap)
+        x = _axpy(alpha, x, p)
+        r = _axpy(-alpha, r, Ap)
+        z = Minv(r)
+        rz_new = _tdot(r, z)
+        beta = rz_new / rz
+        p = _axpy(beta, z, p)  # p ← z + beta·p (axpy on swapped args)
+        return (x, r, z, p, _tdot(r, r), rz_new, k + 1)
+
+    init = (lam0, r0, z0, z0, rr0, rz0, jnp.asarray(0, jnp.int32))
+    lam, _, _, _, _, _, iters = lax.while_loop(cond, body, init)
+    AtL = AT_op(lam)
+    X = jax.tree.map(lambda v, a: v - a, V, AtL)
+    return X, lam, iters
 
 
 def schur_cg_solve(

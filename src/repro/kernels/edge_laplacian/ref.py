@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the edge_laplacian kernel pair."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_laplacian(g, ei, ej, n: int):
+    """L(g) = A Diag(g) Aᵀ (Eq. 5) by scatter-add: for each candidate edge
+    l = {i, j}, add g_l to (i,i), (j,j) and −g_l to (i,j), (j,i)."""
+    L = jnp.zeros((n, n), dtype=g.dtype)
+    L = L.at[ei, ej].add(-g).at[ej, ei].add(-g)
+    L = L.at[ei, ei].add(g).at[ej, ej].add(g)
+    return L
+
+
+def edge_quadform(P, ei, ej):
+    """⟨∂L/∂g_l, P⟩ = P_ii + P_jj − P_ij − P_ji per edge l = {i, j}."""
+    return P[ei, ei] + P[ej, ej] - P[ei, ej] - P[ej, ei]
