@@ -8,6 +8,7 @@ Individual benchmarks (full CLIs):
   benchmarks.bench_scalability    Table I
   benchmarks.bench_training_time  Table II, Figs 7–10
   benchmarks.bench_admm           §V-C solver scalability
+  benchmarks.bench_pipeline       outer-pipeline phase breakdown (DESIGN §10)
   benchmarks.bench_kernels        Pallas kernels vs oracles
   benchmarks.bench_roofline       dry-run roofline table (deliverable g)
 """
@@ -25,26 +26,41 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (slow: ~1h)")
     ap.add_argument("--json", default=None, metavar="BENCH_admm.json",
-                    help="run ONLY the tracked ADMM perf benchmark and write "
-                         "its machine-readable rows (n, solver, psd_backend, "
-                         "dtype, ms_per_iter, cg_per_step, r_asym, …) to this "
-                         "path — the perf trajectory file committed across PRs")
+                    help="run ONLY the tracked perf benchmarks (ADMM solver "
+                         "grid + outer-pipeline phase breakdown) and write "
+                         "their machine-readable rows (n, solver, psd_backend, "
+                         "dtype, ms_per_iter, cg_per_step, r_asym, phase "
+                         "timings, …) to this path — the perf trajectory file "
+                         "committed across PRs")
     args = ap.parse_args(argv)
     os.makedirs(ART, exist_ok=True)
     quick = not args.full
 
     if args.json:
-        from . import bench_admm
+        import json as _json
+        import tempfile
+
+        from . import bench_admm, bench_pipeline
         # Fixed, quick configuration so rows stay comparable across PRs:
-        # backend×driver grid at n=16/32 + the fast-compare row at n=64.
-        bench_admm.main(["--nodes", "16,32", "--iters", "60",
-                         "--fast-nodes", "64", "--json-out", args.json])
-        print(f"tracked ADMM perf rows written to {args.json}")
+        # backend×driver grid at n=16/32 + the fast-compare row at n=64,
+        # plus the end-to-end outer-pipeline rows (device vs host phase
+        # breakdown at the ISSUE-3 acceptance point: n=64, 4 restarts).
+        with tempfile.TemporaryDirectory() as td:
+            bench_admm.main(["--nodes", "16,32", "--iters", "60",
+                             "--fast-nodes", "64",
+                             "--json-out", f"{td}/admm.json"])
+            bench_pipeline.main(["--nodes", "64", "--restarts", "4",
+                                 "--json-out", f"{td}/pipeline.json"])
+            rows = (_json.load(open(f"{td}/admm.json"))
+                    + _json.load(open(f"{td}/pipeline.json")))
+        with open(args.json, "w") as f:
+            _json.dump(rows, f, indent=1)
+        print(f"tracked ADMM + pipeline perf rows written to {args.json}")
         return
 
     from . import (bench_admm, bench_compression, bench_consensus,
-                   bench_dynamic, bench_kernels, bench_roofline,
-                   bench_scalability, bench_training_time)
+                   bench_dynamic, bench_kernels, bench_pipeline,
+                   bench_roofline, bench_scalability, bench_training_time)
 
     t0 = time.time()
     sa = "300" if quick else "1500"
@@ -71,6 +87,16 @@ def main(argv=None) -> None:
     bench_admm.main(["--nodes", "8,16" if quick else "8,16,32,64",
                      "--iters", "100" if quick else "400",
                      "--json-out", f"{ART}/admm.json"])
+
+    print("\n### bench_pipeline (outer-pipeline phase breakdown, DESIGN §10)")
+    if quick:
+        bench_pipeline.main(["--nodes", "24", "--restarts", "2",
+                             "--sa-iters", "300", "--polish-iters", "150",
+                             "--admm-iters", "200",
+                             "--json-out", f"{ART}/pipeline.json"])
+    else:
+        bench_pipeline.main(["--nodes", "64", "--restarts", "4",
+                             "--json-out", f"{ART}/pipeline.json"])
 
     print("\n### bench_dynamic (beyond-paper: time-varying gossip)")
     bench_dynamic.main(["--json-out", f"{ART}/dynamic.json"])

@@ -5,9 +5,10 @@ from .api import BATopoConfig, optimize_topology, sweep_topologies
 from .engine import ADMMState, ProblemSpec
 from .bandwidth import PaperConstants, homo_edge_bandwidth, min_edge_bandwidth, node_hetero_edge_bandwidth, t_epoch, t_iter
 from .constraints import ConstraintSet, bcube_constraints, intra_server_constraints, node_level_constraints, pod_boundary_constraints
-from .graph import Topology, all_edges, aspl, incidence_matrix, is_connected, laplacian_from_weights, r_asym, weight_matrix_from_weights
+from .graph import Topology, all_edges, aspl, incidence_matrix, is_connected, laplacian_from_weights, r_asym, r_asym_fast, weight_matrix_from_weights
 from .topologies import BASELINES, exponential, grid2d, hypercube, make_baseline, random_graph, ring, torus2d, u_equistatic
-from .weights import best_constant_weights, metropolis_weights, polish_weights
+from .warmstart import anneal_topology_batched, aspl_matmul
+from .weights import best_constant_weights, metropolis_weights, polish_weights, polish_weights_batched
 
 __all__ = [
     "ADMMConfig", "ADMMResult", "HeterogeneousADMM", "HomogeneousADMM",
@@ -19,8 +20,11 @@ __all__ = [
     "ConstraintSet", "bcube_constraints", "intra_server_constraints",
     "node_level_constraints", "pod_boundary_constraints",
     "Topology", "all_edges", "aspl", "incidence_matrix", "is_connected",
-    "laplacian_from_weights", "r_asym", "weight_matrix_from_weights",
+    "laplacian_from_weights", "r_asym", "r_asym_fast",
+    "weight_matrix_from_weights",
     "BASELINES", "exponential", "grid2d", "hypercube", "make_baseline",
     "random_graph", "ring", "torus2d", "u_equistatic",
+    "anneal_topology_batched", "aspl_matmul",
     "best_constant_weights", "metropolis_weights", "polish_weights",
+    "polish_weights_batched",
 ]

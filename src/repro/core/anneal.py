@@ -98,11 +98,15 @@ def anneal_topology(
     cur_cost = aspl(n, cur)
     best, best_cost = list(cur), cur_cost
 
-    def z_of(edge_list) -> np.ndarray:
-        z = np.zeros(m, dtype=bool)
-        for e in edge_list:
-            z[eidx[e]] = True
-        return z
+    # Capacity usage M z is maintained incrementally per accepted move (like
+    # ``repair_selection`` does with ``usage``) instead of rebuilding the
+    # O(m) selection mask from scratch for every candidate move.
+    usage = None
+    if cs is not None:
+        z = np.zeros(m, dtype=np.int64)
+        for e in cur:
+            z[eidx[e]] = 1
+        usage = cs.M @ z
 
     for t in range(iters):
         if len(cur) < 2:
@@ -116,7 +120,6 @@ def anneal_topology(
         # two rewiring options preserve degrees
         opts = [((a, c), (b, d)), ((a, d), (b, c))]
         rng.shuffle(opts)
-        accepted = False
         for (p1, p2) in opts:
             p1 = (min(p1), max(p1))
             p2 = (min(p2), max(p2))
@@ -126,11 +129,15 @@ def anneal_topology(
                 continue
             if not (ok[eidx[p1]] and ok[eidx[p2]]):
                 continue
-            new = [e for k, e in enumerate(cur) if k not in (a_i, b_i)] + [p1, p2]
+            new_usage = None
             if cs is not None:
-                z = z_of(new)
-                if not (np.all(cs.M @ z <= cs.e_cap) if not cs.equality else np.all(cs.M @ z == cs.e_cap)):
+                new_usage = (usage - cs.M[:, eidx[(a, b)]] - cs.M[:, eidx[(c, d)]]
+                             + cs.M[:, eidx[p1]] + cs.M[:, eidx[p2]])
+                feasible = (np.all(new_usage == cs.e_cap) if cs.equality
+                            else np.all(new_usage <= cs.e_cap))
+                if not feasible:
                     continue
+            new = [e for k, e in enumerate(cur) if k not in (a_i, b_i)] + [p1, p2]
             if not is_connected(n, new):
                 continue
             new_cost = aspl(n, new)
@@ -138,9 +145,8 @@ def anneal_topology(
                 cur = sorted(new)
                 cur_set = set(cur)
                 cur_cost = new_cost
-                accepted = True
+                usage = new_usage
                 if cur_cost < best_cost:
                     best, best_cost = list(cur), cur_cost
             break
-        _ = accepted
     return sorted(best)

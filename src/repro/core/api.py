@@ -3,21 +3,34 @@
 Pipeline (the paper's full recipe, §IV–§VI):
   1. scenario → ConstraintSet (M, e) and candidate-edge admissibility,
   2. Algorithm 1 (node scenarios) → per-node edge capacities maximizing b_unit,
-  3. simulated-annealing warm start (low ASPL, feasible) [§VI],
+  3. simulated-annealing warm start (low ASPL, feasible) [§VI] — by
+     default the *device* SA (``core.warmstart``): all restarts annealed
+     in one vmapped, scan-compiled call with matmul-BFS ASPL,
   4. Algorithm 2 ADMM (homogeneous Eq. 20 / heterogeneous Eq. 28) — with
      ``cfg.restarts > 1`` all restarts are solved in one batched,
      vmapped device call (engine ``solve_batched``, DESIGN.md §4),
   5. support extraction + greedy feasibility repair (beyond paper, see
-     DESIGN.md §6) + convex weight polish,
-  6. keep the better of {warm start polished, ADMM polished} — the ADMM is
-     non-convex (cardinality / binary constraints), so this guards against
-     bad local points, mirroring the paper's initialization-sensitivity note.
+     DESIGN.md §6) + convex weight polish — every candidate of the solve
+     (restarts × {admm, warm} × classics) polished in one vmapped,
+     scan-compiled call (``weights.polish_weights_batched``),
+  6. keep the best of {ADMM, warm start, feasible classics}, each
+     evaluated by ONE ``r_asym`` (Lanczos above ``FAST_SPECTRAL_MIN_N``)
+     — the ADMM is non-convex (cardinality / binary constraints), so this
+     guards against bad local points, mirroring the paper's
+     initialization-sensitivity note.
+
+The host warm start / polish survive as ``warmstart="host"`` /
+``polish="host"`` — the ``driver="python"``-style fallback and parity
+oracle for the device outer pipeline (DESIGN.md §10). Pass ``profile={}``
+to ``optimize_topology`` to collect the per-phase wall-time breakdown
+(warm start / ADMM / round+repair / polish / eval).
 
 ``sweep_topologies`` amortizes step 4 across many (n, r) scenarios: for a
 fixed n the whole cardinality sweep runs as one vmapped solve.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -27,20 +40,53 @@ from .allocation import allocate_edge_capacity
 from .anneal import anneal_topology, greedy_degree_graph
 from .constraints import ConstraintSet
 from .graph import Topology, all_edges, edge_index, is_connected, r_asym, weight_matrix_from_weights
-from .weights import metropolis_weights, polish_weights
+from .weights import metropolis_weights, polish_weights, polish_weights_batched
 
 __all__ = ["BATopoConfig", "optimize_topology", "sweep_topologies",
            "extract_support", "repair_selection"]
 
 
+def _pipeline_admm_default() -> ADMMConfig:
+    """Pipeline-default ADMM stack (DESIGN.md §10): the PR-2 measured-fast
+    solver options (inexact CG tied to the primal residual, fp32 loop with
+    fp64 residuals) plus a 600-iteration budget. The pipeline consumes only
+    the solver's *support decision* — weights are re-derived by the convex
+    polish, and the warm-start/classic candidates compete on equal footing —
+    and that decision saturates long before the eps-residual does: measured
+    drift vs the exact 1500-iteration solve is 0.0 on every paper scenario
+    at n≤32 and ≤7e-4 at n=64/4 restarts (committed bench_pipeline rows).
+    Direct ``HomogeneousADMM``/``HeterogeneousADMM`` use keeps the exact
+    paper-faithful ``ADMMConfig()`` defaults."""
+    return ADMMConfig(max_iters=600, cg_inexact=True, dtype="float32")
+
+
 @dataclass
 class BATopoConfig:
-    admm: ADMMConfig = field(default_factory=ADMMConfig)
+    admm: ADMMConfig = field(default_factory=_pipeline_admm_default)
     sa_iters: int = 1500
     polish_iters: int = 500
     support_tol: float = 1e-6
     seed: int = 0
     restarts: int = 1
+    # -- outer-pipeline performance stack (DESIGN.md §10) -------------------
+    warmstart: str = "device"     # device (batched SA) | host (parity oracle)
+    polish: str = "device"        # device (vmapped scan) | host
+    polish_dtype: str = "float32"  # device polish loop dtype (f64 bookkeeping)
+    sa_kernel: bool = False       # route matmul-BFS through the hop_bfs Pallas pair
+
+
+def _validate_pipeline_cfg(cfg: BATopoConfig) -> None:
+    """Reject typo'd backend selectors (a silently-ignored
+    ``warmstart="Device"`` would benchmark the wrong pipeline)."""
+    if cfg.warmstart not in ("device", "host"):
+        raise ValueError(f"unknown warmstart {cfg.warmstart!r}; "
+                         "expected 'device' or 'host'")
+    if cfg.polish not in ("device", "host"):
+        raise ValueError(f"unknown polish {cfg.polish!r}; "
+                         "expected 'device' or 'host'")
+    if cfg.polish_dtype not in ("float32", "float64"):
+        raise ValueError(f"unknown polish_dtype {cfg.polish_dtype!r}; "
+                         "expected 'float32' or 'float64'")
 
 
 def extract_support(
@@ -140,33 +186,62 @@ def _homo_degree_targets(n: int, r: int) -> np.ndarray:
     return np.minimum(d, n - 1)
 
 
-def _finalize(n: int, sel: np.ndarray, cfg: BATopoConfig, name: str,
-              cs: ConstraintSet | None, meta: dict) -> Topology:
+def _finalize_batch(n: int, items: list[tuple[np.ndarray, str, dict]],
+                    cfg: BATopoConfig, cs: ConstraintSet | None) -> list[Topology]:
+    """Connectivity-check + weight-polish a batch of candidate selections.
+
+    Every connected candidate of a solve (restarts × {admm, warm} ×
+    classics) is polished in ONE vmapped, scan-compiled device call
+    (``cfg.polish="host"`` keeps the serial host loop as parity oracle).
+    """
     edges_full = all_edges(n)
-    edges = [edges_full[l] for l in np.nonzero(sel)[0]]
-    if not edges or not is_connected(n, edges):
-        g = metropolis_weights(n, edges) if edges else np.zeros(0)
-        t = Topology(n, edges, g, name=name, meta={**meta, "connected": False})
-        return t
-    g0 = metropolis_weights(n, edges)
-    g = polish_weights(n, edges, g0, iters=cfg.polish_iters)
-    t = Topology(n, edges, g, name=name, meta={**meta, "connected": True})
-    return t
+    topos: list[Topology | None] = [None] * len(items)
+    # identical supports (a warm-started ADMM frequently rounds back to
+    # exactly its warm-start support; restarts can coincide too) polish to
+    # identical weights — solve each distinct support once
+    support_of: dict[bytes, list[int]] = {}
+    for k, (sel, name, meta) in enumerate(items):
+        edges = [edges_full[l] for l in np.nonzero(sel)[0]]
+        if not edges or not is_connected(n, edges):
+            g = metropolis_weights(n, edges) if edges else np.zeros(0)
+            topos[k] = Topology(n, edges, g, name=name,
+                                meta={**meta, "connected": False})
+            continue
+        support_of.setdefault(np.asarray(sel, dtype=bool).tobytes(),
+                              []).append(k)
+    if support_of:
+        pending = []
+        for ks in support_of.values():
+            edges = [edges_full[l] for l in np.nonzero(items[ks[0]][0])[0]]
+            pending.append((ks, edges, metropolis_weights(n, edges)))
+        if cfg.polish == "device":
+            gs = polish_weights_batched(
+                n, [e for _, e, _ in pending], [g0 for _, _, g0 in pending],
+                iters=cfg.polish_iters, dtype=cfg.polish_dtype)
+        else:
+            gs = [polish_weights(n, e, g0, iters=cfg.polish_iters)
+                  for _, e, g0 in pending]
+        for (ks, edges, _), g in zip(pending, gs):
+            for k in ks:
+                _, name, meta = items[k]
+                topos[k] = Topology(n, edges, g, name=name,
+                                    meta={**meta, "connected": True})
+    return topos
 
 
-def _warm_start(n: int, r: int, scenario: str, cs: ConstraintSet | None,
+def _init_graph(n: int, r: int, scenario: str, cs: ConstraintSet | None,
                 deg_targets, cfg: BATopoConfig, restart: int):
-    """Host-side warm start: greedy feasible graph + simulated annealing.
-    Returns (g0, z0, lam0)."""
+    """Greedy feasible start graph for one restart. Returns (edges0, seed)."""
     seed = cfg.seed + 1000 * restart
     rng = np.random.default_rng(seed)
     if deg_targets is not None:
         warm_cs = cs if scenario == "node" else None
-        edges0 = greedy_degree_graph(n, deg_targets, rng, warm_cs)
-    else:
-        edges0 = _greedy_constraint_graph(n, r, cs, rng)
-    edges0 = anneal_topology(n, edges0, cs if scenario != "homo" else None,
-                             iters=cfg.sa_iters, seed=seed)
+        return greedy_degree_graph(n, deg_targets, rng, warm_cs), seed
+    return _greedy_constraint_graph(n, r, cs, rng), seed
+
+
+def _pack_warm(n: int, edges0: list[tuple[int, int]]):
+    """Annealed edge list → (g0, z0, lam0) ADMM warm start."""
     eidx = edge_index(n)
     m = len(all_edges(n))
     z0 = np.zeros(m)
@@ -177,8 +252,47 @@ def _warm_start(n: int, r: int, scenario: str, cs: ConstraintSet | None,
     for k, e in enumerate(edges0):
         g0[eidx[e]] = gm[k]
     W0 = weight_matrix_from_weights(n, edges0, gm)
-    lam0 = max(1.0 - r_asym(W0), 0.05)
+    lam0 = max(1.0 - r_asym(W0, symmetric=True), 0.05)
     return g0, z0, lam0
+
+
+def _anneal_edges(n: int, inits: list[list[tuple[int, int]]], seeds: list[int],
+                  sa_cs: ConstraintSet | None, cfg: BATopoConfig) -> list:
+    """Anneal a batch of start graphs. ``cfg.warmstart="device"`` runs one
+    vmapped, scan-compiled SA call per distinct edge count (a 2-swap
+    preserves the count, so restarts — or sweep instances — with
+    equal-size init graphs share a call and a compilation);
+    ``"host"`` keeps the seed per-graph Python SA as the parity oracle."""
+    if cfg.warmstart == "device":
+        from .warmstart import anneal_topology_batched
+
+        groups: dict[int, list[int]] = {}
+        for k, e in enumerate(inits):
+            groups.setdefault(len(e), []).append(k)
+        annealed: list = [None] * len(inits)
+        for idxs in groups.values():
+            outs = anneal_topology_batched(
+                n, [inits[i] for i in idxs], sa_cs, iters=cfg.sa_iters,
+                seeds=[seeds[i] for i in idxs], use_kernel=cfg.sa_kernel)
+            for i, out in zip(idxs, outs):
+                annealed[i] = out
+        return annealed
+    return [anneal_topology(n, e0, sa_cs, iters=cfg.sa_iters, seed=sd)
+            for e0, sd in zip(inits, seeds)]
+
+
+def _warm_starts(n: int, r: int, scenario: str, cs: ConstraintSet | None,
+                 deg_targets, cfg: BATopoConfig, n_restarts: int):
+    """Warm starts for every restart: greedy init (host) + simulated
+    annealing (batched on device by default). Returns (g0, z0, lam0)s."""
+    inits, seeds = [], []
+    for k in range(n_restarts):
+        edges0, seed = _init_graph(n, r, scenario, cs, deg_targets, cfg, k)
+        inits.append(edges0)
+        seeds.append(seed)
+    sa_cs = cs if scenario != "homo" else None
+    annealed = _anneal_edges(n, inits, seeds, sa_cs, cfg)
+    return [_pack_warm(n, e) for e in annealed]
 
 
 def _make_solver(n: int, r: int, scenario: str, cs: ConstraintSet | None,
@@ -198,6 +312,7 @@ def optimize_topology(
     cs: ConstraintSet | None = None,
     node_bandwidths: np.ndarray | None = None,
     cfg: BATopoConfig | None = None,
+    profile: dict | None = None,
 ) -> Topology:
     """Produce a BA-Topo for the given scenario.
 
@@ -211,9 +326,12 @@ def optimize_topology(
 
     With ``cfg.restarts > 1`` and a JAX backend, all restarts are solved by
     one batched device call; the best candidate (lowest ``r_asym`` after
-    repair + polish) wins.
+    repair + polish) wins. Pass ``profile={}`` to collect the per-phase
+    wall-time breakdown (keys ``warm_s/admm_s/round_s/polish_s/eval_s``).
     """
     cfg = cfg or BATopoConfig()
+    _validate_pipeline_cfg(cfg)
+    prof = {} if profile is None else profile
     meta: dict = {"scenario": scenario, "r": r}
 
     if scenario == "node":
@@ -233,17 +351,17 @@ def optimize_topology(
     else:
         deg_targets = _homo_degree_targets(n, r)
 
-    # ---- warm starts (host) + one solver for every restart ------------------
+    # ---- phase 1: warm starts (device SA by default) ----------------------
+    t0 = time.perf_counter()
     n_restarts = max(1, cfg.restarts)
-    warms = [_warm_start(n, r, scenario, cs, deg_targets, cfg, k)
-             for k in range(n_restarts)]
-    warm_topos = [_finalize(n, z0.astype(bool), cfg, f"ba-topo(n={n},r={r},warm)",
-                            cs, dict(meta)) for _, z0, _ in warms]
+    warms = _warm_starts(n, r, scenario, cs, deg_targets, cfg, n_restarts)
+    prof["warm_s"] = prof.get("warm_s", 0.0) + time.perf_counter() - t0
 
     solver = _make_solver(n, r, scenario, cs, cfg)
 
-    # ---- ADMM: batched restarts in one device call (scan driver only; an
-    # explicit driver="python" request keeps the per-restart loop) ----------
+    # ---- phase 2: ADMM — batched restarts in one device call (scan driver
+    # only; an explicit driver="python" request keeps the per-restart loop)
+    t0 = time.perf_counter()
     if (n_restarts > 1 and cfg.admm.solver != "kkt_bicgstab_ilu"
             and cfg.admm.driver == "scan"):
         g0s = np.stack([w[0] for w in warms])
@@ -256,49 +374,76 @@ def optimize_topology(
         results = [solver.solve(g0=g0, lam0=lam0) for g0, _, lam0 in warms]
     else:
         results = [solver.solve(g0=g0, z0=z0, lam0=lam0) for g0, z0, lam0 in warms]
+    prof["admm_s"] = prof.get("admm_s", 0.0) + time.perf_counter() - t0
 
-    best_topo: Topology | None = None
-    for (g0, z0, lam0), warm_topo, res in zip(warms, warm_topos, results):
+    # ---- phase 3: rounding + greedy feasibility repair --------------------
+    t0 = time.perf_counter()
+    items: list[tuple[np.ndarray, str, dict]] = []
+    sources: list[str] = []
+    for (g0, z0, lam0), res in zip(warms, results):
         if scenario == "homo":
             sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)
         else:
             sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol, z=res.z,
                                   edge_ok=np.asarray(cs.edge_ok))
         sel = repair_selection(n, sel, res.g + res.g_raw, cs)
-        admm_topo = _finalize(n, sel, cfg, f"ba-topo(n={n},r={r})", cs, {**meta,
-                              "admm_iters": res.iters, "admm_residual": res.residual,
-                              "lam_tilde": res.lam_tilde})
-        for cand in (admm_topo, warm_topo):
-            if not cand.meta.get("connected", False):
-                continue
-            if best_topo is None or cand.r_asym() < best_topo.r_asym():
-                src = "admm" if cand is admm_topo else "warm-start"
-                cand.meta["selected_from"] = src
-                best_topo = cand
+        items.append((sel, f"ba-topo(n={n},r={r})", {**meta,
+                      "admm_iters": res.iters, "admm_residual": res.residual,
+                      "lam_tilde": res.lam_tilde}))
+        sources.append("admm")
+        items.append((z0.astype(bool), f"ba-topo(n={n},r={r},warm)", dict(meta)))
+        sources.append("warm-start")
+    for base_name, sel in _classic_candidates(n, r, cs):
+        items.append((sel, f"ba-topo(n={n},r={r},{base_name})", dict(meta)))
+        sources.append(f"classic:{base_name}")
+    prof["round_s"] = prof.get("round_s", 0.0) + time.perf_counter() - t0
 
-    best_topo = _consider_classics(n, r, cfg, cs, meta, best_topo)
+    # ---- phase 4: weight polish, all candidates in one batched call -------
+    t0 = time.perf_counter()
+    topos = _finalize_batch(n, items, cfg, cs)
+    prof["polish_s"] = prof.get("polish_s", 0.0) + time.perf_counter() - t0
 
+    # ---- phase 5: spectral evaluation (one r_asym per distinct support) ---
+    t0 = time.perf_counter()
+    best_topo: Topology | None = None
+    best_val = np.inf
+    val_cache: dict[bytes, float] = {}
+    for (sel, _, _), cand, src in zip(items, topos, sources):
+        if not cand.meta.get("connected", False):
+            continue
+        key = np.asarray(sel, dtype=bool).tobytes()
+        if key not in val_cache:
+            val_cache[key] = cand.r_asym()
+        val = val_cache[key]
+        if best_topo is None or val < best_val:
+            cand.meta["selected_from"] = src
+            best_topo, best_val = cand, val
     assert best_topo is not None, "failed to construct any connected topology"
-    best_topo.meta["r_asym"] = best_topo.r_asym()
+    best_topo.meta["r_asym"] = best_val
+    prof["eval_s"] = prof.get("eval_s", 0.0) + time.perf_counter() - t0
     return best_topo
 
 
-def _consider_classics(n: int, r: int, cfg: BATopoConfig,
-                       cs: ConstraintSet | None, meta: dict,
-                       best_topo: Topology | None) -> Topology | None:
+def _classic_candidates(n: int, r: int,
+                        cs: ConstraintSet | None) -> list[tuple[str, np.ndarray]]:
     """Classic-topology candidates: the ADMM is non-convex, and on small
     tightly-budgeted instances a known-good structure (ring / torus) that
-    happens to be feasible can beat a weak local optimum. Polish their
-    weights with the same convex step so the comparison is fair."""
+    happens to be feasible can beat a weak local optimum. Their weights get
+    the same convex polish as the ADMM output so the comparison is fair.
+
+    Returns (name, selection) pairs for the feasible classics. Only
+    ``ValueError`` — the documented "n not expressible for this family"
+    signal (e.g. hypercube needs a power of two) — skips a baseline; any
+    other exception is a real construction bug and propagates.
+    """
     from .topologies import make_baseline
-    classic: list = []
+    eidx = edge_index(n)
+    out: list[tuple[str, np.ndarray]] = []
     for kind in ("ring", "torus", "hypercube"):
         try:
-            classic.append(make_baseline(kind, n))
-        except Exception:
+            base = make_baseline(kind, n)
+        except ValueError:
             continue
-    eidx = edge_index(n)
-    for base in classic:
         if len(base.edges) > r or base.meta.get("directed"):
             continue
         sel = np.zeros(len(all_edges(n)), dtype=bool)
@@ -306,13 +451,8 @@ def _consider_classics(n: int, r: int, cfg: BATopoConfig,
             sel[eidx[tuple(sorted(e))]] = True
         if cs is not None and not cs.feasible(sel):
             continue
-        cand = _finalize(n, sel, cfg, f"ba-topo(n={n},r={r},{base.name})", cs,
-                         dict(meta))
-        if cand.meta.get("connected") and (
-                best_topo is None or cand.r_asym() < best_topo.r_asym()):
-            cand.meta["selected_from"] = f"classic:{base.name}"
-            best_topo = cand
-    return best_topo
+        out.append((base.name, sel))
+    return out
 
 
 def sweep_topologies(
@@ -346,16 +486,24 @@ def sweep_topologies(
         raise ValueError(
             "sweep_topologies needs a device backend (schur_cg or "
             "kkt_bicgstab); the scipy-ILU backend is host-side")
+    _validate_pipeline_cfg(cfg)
     out: dict = {}
     for n in ns:
         m = len(all_edges(n))
         rs_req = [int(r) for r in rs]
         rs_n = [min(r, m) for r in rs_req]  # solve with the clamped budget
         spec = make_homo_spec(n, max(rs_n), cfg.admm)
-        warms = []
+        # one warm start per (n, r); sweep instance k plays the role of
+        # restart k, and the device SA batches instances whose warm graphs
+        # share an edge count into one vmapped call
+        inits, seeds = [], []
         for k, r in enumerate(rs_n):
             deg_targets = _homo_degree_targets(n, r)
-            warms.append(_warm_start(n, r, "homo", None, deg_targets, cfg, k))
+            edges0, seed = _init_graph(n, r, "homo", None, deg_targets, cfg, k)
+            inits.append(edges0)
+            seeds.append(seed)
+        warms = [_pack_warm(n, e)
+                 for e in _anneal_edges(n, inits, seeds, None, cfg)]
         states = [init_state(spec, jnp.asarray(g0), lam0) for g0, _, lam0 in warms]
         batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
         results = solve_sweep_spec(spec, np.asarray(rs_n), batched, cfg.admm)
@@ -363,22 +511,31 @@ def sweep_topologies(
             meta = {"scenario": "homo", "r": r}
             sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)
             sel = repair_selection(n, sel, res.g + res.g_raw, None)
-            admm_topo = _finalize(n, sel, cfg, f"ba-topo(n={n},r={r})", None,
-                                  {**meta, "admm_iters": res.iters,
-                                   "admm_residual": res.residual,
-                                   "lam_tilde": res.lam_tilde})
-            warm_topo = _finalize(n, z0.astype(bool), cfg,
-                                  f"ba-topo(n={n},r={r},warm)", None, dict(meta))
-            best = None
-            for cand, src in ((admm_topo, "admm"), (warm_topo, "warm-start")):
+            items = [(sel, f"ba-topo(n={n},r={r})",
+                      {**meta, "admm_iters": res.iters,
+                       "admm_residual": res.residual,
+                       "lam_tilde": res.lam_tilde}),
+                     (z0.astype(bool), f"ba-topo(n={n},r={r},warm)", dict(meta))]
+            sources = ["admm", "warm-start"]
+            for base_name, csel in _classic_candidates(n, r, None):
+                items.append((csel, f"ba-topo(n={n},r={r},{base_name})",
+                              dict(meta)))
+                sources.append(f"classic:{base_name}")
+            topos = _finalize_batch(n, items, cfg, None)
+            best, best_val = None, np.inf
+            val_cache: dict[bytes, float] = {}
+            for (csel, _, _), cand, src in zip(items, topos, sources):
                 if not cand.meta.get("connected", False):
                     continue
-                if best is None or cand.r_asym() < best.r_asym():
+                key = np.asarray(csel, dtype=bool).tobytes()
+                if key not in val_cache:
+                    val_cache[key] = cand.r_asym()
+                val = val_cache[key]
+                if best is None or val < best_val:
                     cand.meta["selected_from"] = src
-                    best = cand
-            best = _consider_classics(n, r, cfg, None, meta, best)
+                    best, best_val = cand, val
             if best is not None:
-                best.meta["r_asym"] = best.r_asym()
+                best.meta["r_asym"] = best_val
             out[(n, r_req)] = best  # keyed by the *requested* budget
     return out
 

@@ -1,0 +1,298 @@
+"""Device-resident simulated-annealing warm start (§VI), batched restarts.
+
+The host `anneal.anneal_topology` pays an O(n·m) Python BFS for ASPL plus
+constraint re-checks for every one of its ~1500 candidate moves — at the
+ROADMAP's target scales that makes the warm start, not the ADMM, the outer
+pipeline's dominant phase. This module is the device mirror, following the
+PR-1/PR-2 engine architecture:
+
+  - state is the adjacency *matrix* plus a fixed-size endpoint array (a
+    degree-preserving 2-swap never changes the edge count),
+  - ASPL and connectivity are computed together by matmul-BFS hop
+    accumulation: ``reach ← reach ∨ (reach @ Adj)`` under a bounded
+    ``lax.while_loop``, hop counts summed on the fly from the reach-count
+    deltas (``kernels/hop_bfs`` fuses the matmul + count per row band; the
+    pure-JAX path is the default exactly like ``edge_laplacian``),
+  - heterogeneous capacity rows are checked as incremental ``M @ z``
+    updates — four gathered M columns per candidate move, never the full
+    product,
+  - the whole SA loop is ``lax.scan``-compiled and ``vmap``ped over
+    restarts (and, via `sweep` grouping in the API layer, over sweep
+    instances that share an edge count).
+
+The host implementation stays as the ``warmstart="host"`` fallback and the
+parity oracle (see DESIGN.md §10); the device SA keeps the host's
+invariants (degree preservation, feasibility, connectivity) but not its
+RNG stream — trajectories differ, qualities match.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..kernels.hop_bfs import ops as _hop_ops
+from ..kernels.hop_bfs import ref as _hop_ref
+from . import engine as _engine  # noqa: F401 — owns the global x64 enable
+from .constraints import ConstraintSet
+from .graph import all_edges
+
+__all__ = ["aspl_matmul", "anneal_topology_batched"]
+
+
+def _packed_index(n, i, j):
+    """Analytic packed index of edge {i, j} in ``all_edges(n)`` order:
+    l = lo·n − lo(lo+1)/2 + (hi−lo−1) (same closed form as the
+    ``edge_laplacian`` kernel uses)."""
+    lo = jnp.minimum(i, j)
+    hi = jnp.maximum(i, j)
+    return lo * n - (lo * (lo + 1)) // 2 + (hi - lo - 1)
+
+
+def _hop(reach, adj, use_kernel: bool):
+    if use_kernel:
+        return _hop_ops.hop_step(reach, adj, use_kernel=True)
+    return _hop_ref.hop_step(reach, adj)
+
+
+def _aspl_total(adj, use_kernel: bool):
+    """All-sources BFS by reach expansion. Returns ``(total, connected)``
+    with ``total`` = Σ_{s≠t} dist(s, t) as int32 (exact) and ``connected``
+    a bool scalar. Runs at most diameter hops — the while loop stops as
+    soon as the reach matrix is full or stops growing (disconnected)."""
+    n = adj.shape[0]
+    reach0 = jnp.eye(n, dtype=bool) | adj
+    cnt0 = jnp.sum(reach0, dtype=jnp.int32)
+    # distance-1 pairs contribute 1 each: count = cnt0 − n diagonal entries
+    total0 = cnt0 - n
+
+    def cond_fn(c):
+        _, _, cnt, k, grew = c
+        return (cnt < n * n) & grew & (k < n)
+
+    def body_fn(c):
+        reach, total, cnt, k, _ = c
+        new_reach, new_cnt = _hop(reach, adj, use_kernel)
+        newly = new_cnt - cnt          # pairs first reached at distance k+1
+        total = total + (k + 1) * newly
+        return (new_reach, total, new_cnt, k + 1, newly > 0)
+
+    _, total, cnt, _, _ = lax.while_loop(
+        cond_fn, body_fn,
+        (reach0, total0, cnt0, jnp.asarray(1, jnp.int32), cnt0 > n))
+    return total, cnt == n * n
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _aspl_cost(adj, use_kernel: bool = False):
+    """In-graph SA move cost: ASPL as fp64, +inf if disconnected."""
+    n = adj.shape[0]
+    total, connected = _aspl_total(adj, use_kernel)
+    denom = n * (n - 1)
+    return jnp.where(connected,
+                     total.astype(jnp.float64) / denom,
+                     jnp.asarray(jnp.inf, jnp.float64))
+
+
+_aspl_total_jit = jax.jit(_aspl_total, static_argnames=("use_kernel",))
+
+
+def aspl_matmul(adj, use_kernel: bool = False) -> float:
+    """Average shortest path length of a boolean adjacency matrix; +inf if
+    disconnected. Bit-identical to ``graph.aspl``: the hop total is an
+    exact integer and the one division happens on host (XLA would fold a
+    constant divisor into a multiply-by-reciprocal, which rounds
+    differently)."""
+    n = int(adj.shape[0])
+    total, connected = _aspl_total_jit(jnp.asarray(adj), use_kernel)
+    if not bool(connected):
+        return float("inf")
+    return int(total) / (n * (n - 1))
+
+
+def _sa_move(spec, carry, t):
+    """One SA step: propose a degree-preserving 2-swap, validate it with
+    cheap O(1)/O(q) checks, price the survivor with one matmul-BFS, accept
+    by Metropolis. All branches are data-dependent selects — the step is
+    scan- and vmap-compatible."""
+    n, E, T0, iters, use_kernel, equality, has_cs = spec["static"]
+    okm, M, e_cap = spec["okm"], spec["M"], spec["e_cap"]
+    adj, eps, usage, cur_cost, best_adj, best_eps, best_cost, key = carry
+
+    kq = jax.random.fold_in(key, t)
+    k_a, k_b, k_o, k_u = jax.random.split(kq, 4)
+    T = T0 * jnp.exp(-3.0 * t / max(iters, 1))
+
+    a_i = jax.random.randint(k_a, (), 0, E)
+    b_i = jax.random.randint(k_b, (), 0, E)
+    a, b = eps[a_i, 0], eps[a_i, 1]
+    c, d = eps[b_i, 0], eps[b_i, 1]
+
+    # the two degree-preserving rewirings {(a,c),(b,d)} / {(a,d),(b,c)},
+    # tried in random order: option B is considered only when A fails the
+    # cheap/feasibility checks. Known divergence from the host oracle: the
+    # host also falls through to B when A prices as *disconnected*; here
+    # connectivity is only learned from the (expensive) BFS, and pricing
+    # both options would double the per-move cost — a disconnecting A
+    # simply rejects the move. Quality parity is covered by tests.
+    flip = jax.random.bernoulli(k_o)
+    vA1, vA2 = jnp.where(flip, d, c), jnp.where(flip, c, d)
+    vB1, vB2 = jnp.where(flip, c, d), jnp.where(flip, d, c)
+
+    def cheap_valid(p1a, p1b, p2a, p2b):
+        s1a, s1b = jnp.minimum(p1a, p1b), jnp.maximum(p1a, p1b)
+        s2a, s2b = jnp.minimum(p2a, p2b), jnp.maximum(p2a, p2b)
+        ok = (p1a != p1b) & (p2a != p2b)                    # no self loops
+        ok &= ~((s1a == s2a) & (s1b == s2b))                # p1 != p2
+        ok &= ~adj[s1a, s1b] & ~adj[s2a, s2b]               # not existing
+        ok &= okm[s1a, s1b] & okm[s2a, s2b]                 # admissible
+        return ok, (s1a, s1b, s2a, s2b)
+
+    def usage_delta(s1a, s1b, s2a, s2b):
+        l_ab = _packed_index(n, a, b)
+        l_cd = _packed_index(n, c, d)
+        l_p1 = _packed_index(n, s1a, s1b)
+        l_p2 = _packed_index(n, s2a, s2b)
+        return usage - M[:, l_ab] - M[:, l_cd] + M[:, l_p1] + M[:, l_p2]
+
+    okA, sA = cheap_valid(a, vA1, b, vA2)
+    okB, sB = cheap_valid(a, vB1, b, vB2)
+    if has_cs:
+        uA = usage_delta(*sA)
+        uB = usage_delta(*sB)
+        feasA = jnp.all(uA == e_cap) if equality else jnp.all(uA <= e_cap)
+        feasB = jnp.all(uB == e_cap) if equality else jnp.all(uB <= e_cap)
+        okA &= feasA
+        okB &= feasB
+    use_A = okA
+    valid = (okA | okB) & (a_i != b_i)
+    s1a, s1b, s2a, s2b = jax.tree.map(
+        lambda xa, xb: jnp.where(use_A, xa, xb), sA, sB)
+    if has_cs:
+        new_usage = jnp.where(use_A, uA, uB)
+    else:
+        new_usage = usage
+
+    F, Tr = jnp.asarray(False), jnp.asarray(True)
+    adj2 = (adj.at[a, b].set(F).at[b, a].set(F)
+               .at[c, d].set(F).at[d, c].set(F)
+               .at[s1a, s1b].set(Tr).at[s1b, s1a].set(Tr)
+               .at[s2a, s2b].set(Tr).at[s2b, s2a].set(Tr))
+    eps2 = (eps.at[a_i, 0].set(s1a).at[a_i, 1].set(s1b)
+               .at[b_i, 0].set(s2a).at[b_i, 1].set(s2b))
+
+    # connectivity + ASPL in one BFS; disconnected → +inf → never accepted
+    new_cost = _aspl_cost(adj2, use_kernel=use_kernel)
+    accept_p = jnp.exp(-(new_cost - cur_cost) / jnp.maximum(T, 1e-9))
+    accept = valid & ((new_cost <= cur_cost)
+                      | (jax.random.uniform(k_u) < accept_p))
+
+    adj = jnp.where(accept, adj2, adj)
+    eps = jnp.where(accept, eps2, eps)
+    usage = jnp.where(accept, new_usage, usage)
+    cur_cost = jnp.where(accept, new_cost, cur_cost)
+    better = accept & (new_cost < best_cost)
+    best_adj = jnp.where(better, adj2, best_adj)
+    best_eps = jnp.where(better, eps2, best_eps)
+    best_cost = jnp.where(better, new_cost, best_cost)
+    return (adj, eps, usage, cur_cost, best_adj, best_eps, best_cost, key), None
+
+
+@partial(jax.jit, static_argnames=("n", "E", "iters", "use_kernel",
+                                   "equality", "has_cs"))
+def _sa_run(adj0, eps0, usage0, keys, okm, M, e_cap, T0,
+            n, E, iters, use_kernel, equality, has_cs):
+    """vmap over restarts of the scan-compiled SA loop."""
+    spec = {"static": (n, E, T0, iters, use_kernel, equality, has_cs),
+            "okm": okm, "M": M, "e_cap": e_cap}
+
+    def one(adj0_b, eps0_b, usage0_b, key_b):
+        cost0 = _aspl_cost(adj0_b, use_kernel=use_kernel)
+        carry0 = (adj0_b, eps0_b, usage0_b, cost0,
+                  adj0_b, eps0_b, cost0, key_b)
+        carry, _ = lax.scan(partial(_sa_move, spec), carry0,
+                            jnp.arange(iters, dtype=jnp.int32))
+        _, _, _, _, best_adj, best_eps, best_cost, _ = carry
+        return best_eps, best_cost
+
+    return jax.vmap(one)(adj0, eps0, usage0, keys)
+
+
+def anneal_topology_batched(
+    n: int,
+    edges0: list[list[tuple[int, int]]],
+    cs: ConstraintSet | None = None,
+    iters: int = 2000,
+    T0: float = 0.5,
+    seeds: list[int] | None = None,
+    use_kernel: bool = False,
+) -> list[list[tuple[int, int]]]:
+    """SA over degree-preserving 2-swaps for a *batch* of start graphs in
+    one vmapped, scan-compiled device call. Mirrors ``anneal_topology``'s
+    objective and invariants (ASPL minimization, degree preservation,
+    capacity feasibility, connectivity).
+
+    Every element of ``edges0`` must have the same edge count (a 2-swap
+    preserves it, so the endpoint array is a fixed-shape state leaf);
+    callers group heterogeneous batches by edge count.
+    """
+    B = len(edges0)
+    assert B > 0
+    E = len(edges0[0])
+    assert all(len(e) == E for e in edges0), "edge counts must match in a batch"
+    if E < 2 or iters <= 0:  # host loop also bails: no 2-swap is possible
+        return [sorted(e) for e in edges0]
+    seeds = list(range(B)) if seeds is None else list(seeds)
+    assert len(seeds) == B
+
+    adj0 = np.zeros((B, n, n), dtype=bool)
+    eps0 = np.zeros((B, E, 2), dtype=np.int32)
+    for k, edges in enumerate(edges0):
+        for l, (i, j) in enumerate(edges):
+            i, j = (i, j) if i < j else (j, i)
+            adj0[k, i, j] = adj0[k, j, i] = True
+            eps0[k, l] = (i, j)
+
+    m = len(all_edges(n))
+    okm = np.zeros((n, n), dtype=bool)
+    iu = np.triu_indices(n, 1)
+    ok_vec = (np.ones(m, dtype=bool) if cs is None
+              else np.asarray(cs.edge_ok, dtype=bool))
+    okm[iu] = ok_vec
+    okm |= okm.T
+
+    has_cs = cs is not None
+    if has_cs:
+        M = jnp.asarray(cs.M, dtype=jnp.int32)
+        e_cap = jnp.asarray(cs.e_cap, dtype=jnp.int32)
+        usage0 = np.zeros((B, cs.q), dtype=np.int32)
+        M_host = np.asarray(cs.M, dtype=np.int32)
+        from .graph import edge_index
+        eidx = edge_index(n)
+        for k, edges in enumerate(edges0):
+            z = np.zeros(m, dtype=np.int32)
+            for e in edges:
+                z[eidx[tuple(sorted(e))]] = 1
+            usage0[k] = M_host @ z
+        equality = bool(cs.equality)
+    else:
+        M = jnp.zeros((0, m), dtype=jnp.int32)
+        e_cap = jnp.zeros((0,), dtype=jnp.int32)
+        usage0 = np.zeros((B, 0), dtype=np.int32)
+        equality = False
+
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    best_eps, _ = _sa_run(
+        jnp.asarray(adj0), jnp.asarray(eps0), jnp.asarray(usage0), keys,
+        jnp.asarray(okm), M, e_cap, jnp.asarray(float(T0)),
+        n=n, E=E, iters=int(iters), use_kernel=bool(use_kernel),
+        equality=equality, has_cs=has_cs)
+
+    out = []
+    for k in range(B):
+        ep = np.asarray(best_eps[k])
+        out.append(sorted((int(i), int(j)) for i, j in ep))
+    return out

@@ -22,6 +22,7 @@ __all__ = [
     "uniform_neighbor_weights",
     "best_constant_weights",
     "polish_weights",
+    "polish_weights_batched",
     "asym_factor_from_g",
 ]
 
@@ -49,9 +50,20 @@ def best_constant_weights(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
     return np.full(len(edges), alpha)
 
 
-def asym_factor_from_g(n: int, edges: list[tuple[int, int]], g: np.ndarray) -> float:
-    """max(λ_max(L)−1, 1−λ₂(L)) — equals r_asym(I−L) when both λ bounds hold."""
+def asym_factor_from_g(n: int, edges: list[tuple[int, int]], g: np.ndarray,
+                       fast: bool | None = None) -> float:
+    """max(λ_max(L)−1, 1−λ₂(L)) — identically r_asym(I−L): both equal
+    max_{i≥2} |1 − λ_i(L)| (the extremes of L bound the magnitude max, and
+    λ₂ > 1 forces λ_max > 1). Above ``FAST_SPECTRAL_MIN_N`` (or with
+    ``fast=True``) the Lanczos largest-magnitude path is used; the
+    ``eigvalsh`` path is the exact oracle."""
+    from .graph import FAST_SPECTRAL_MIN_N, r_asym_fast
+
+    if fast is None:
+        fast = n >= FAST_SPECTRAL_MIN_N
     L = laplacian_from_weights(n, edges, g)
+    if fast:
+        return r_asym_fast(np.eye(n) - L, symmetric=True)
     ev = np.linalg.eigvalsh(L)
     return float(max(ev[-1] - 1.0, 1.0 - ev[1]))
 
@@ -116,3 +128,120 @@ def polish_weights(
             break
         g = project(g - step * sub / nrm)
     return best_g
+
+
+# =========================================================================
+# Device polish: the same projected-subgradient loop, scan-compiled and
+# vmapped across every candidate support of a solve (DESIGN.md §10)
+# =========================================================================
+
+def _polish_scan_factory():
+    """Build the jitted scan loop lazily so importing ``weights`` does not
+    pull in JAX for numpy-only callers."""
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+    from jax import lax
+
+    from . import engine as _engine  # noqa: F401 — owns the global x64 enable
+
+    def project(g, ei, ej, mask, n, enforce_diag):
+        g = jnp.where(mask, jnp.maximum(g, 0.0), 0.0)
+        if enforce_diag:
+            diag = jnp.zeros(n, dtype=g.dtype).at[ei].add(g).at[ej].add(g)
+            mx = jnp.max(diag)
+            g = jnp.where(mx > 1.0, g / mx, g)
+        return g
+
+    @partial(jax.jit, static_argnames=("n", "iters", "enforce_diag"))
+    def polish_scan(ei, ej, mask, g0, n, iters, enforce_diag):
+        """One candidate: (Emax,) padded edge arrays (padding = edge (0,0)
+        with ``mask`` False — its weight is pinned to 0 and its subgradient
+        masked, so it never touches the Laplacian). The eigensolve runs in
+        the input dtype (fp32 by default); objective bookkeeping (best-f
+        comparisons) is fp64 per the PR-2 convention."""
+        dt = g0.dtype
+        g = project(g0, ei, ej, mask, n, enforce_diag)
+
+        def body(carry, t):
+            g, best_g, best_f, done = carry
+            L = jnp.zeros((n, n), dtype=dt)
+            L = L.at[ei, ej].add(-g).at[ej, ei].add(-g)
+            L = L.at[ei, ei].add(g).at[ej, ej].add(g)
+            evals, evecs = jnp.linalg.eigh(L)
+            f_max = evals[-1] - 1.0
+            f_gap = 1.0 - evals[1]
+            use_max = f_max >= f_gap
+            u = jnp.where(use_max, evecs[:, -1], evecs[:, 1])
+            sub = (u[ei] - u[ej]) ** 2 * jnp.where(use_max, 1.0, -1.0)
+            sub = jnp.where(mask, sub, 0.0)
+            f = jnp.maximum(f_max, f_gap).astype(jnp.float64)
+            improved = (~done) & (f < best_f)
+            best_f = jnp.where(improved, f, best_f)
+            best_g = jnp.where(improved, g, best_g)
+            step = 0.05 / jnp.sqrt(1.0 + t)
+            nrm = jnp.sqrt(jnp.sum(sub * sub))
+            done = done | (nrm < 1e-14)
+            g_new = project(g - step * sub / jnp.maximum(nrm, 1e-30),
+                            ei, ej, mask, n, enforce_diag)
+            g = jnp.where(done, g, g_new)
+            return (g, best_g, best_f, done), None
+
+        carry0 = (g, g, jnp.asarray(jnp.inf, jnp.float64), jnp.asarray(False))
+        (g, best_g, best_f, _), _ = lax.scan(
+            body, carry0, jnp.arange(iters, dtype=dt))
+        return best_g, best_f
+
+    return jax.vmap(polish_scan, in_axes=(0, 0, 0, 0, None, None, None))
+
+
+_POLISH_VMAP = None
+
+
+def polish_weights_batched(
+    n: int,
+    edge_lists: list[list[tuple[int, int]]],
+    g0s: list[np.ndarray] | None = None,
+    iters: int = 400,
+    enforce_diag: bool = True,
+    dtype: str = "float32",
+) -> list[np.ndarray]:
+    """``polish_weights`` for every candidate support of a solve in ONE
+    vmapped, scan-compiled device call (restarts × {admm, warm} × classics
+    used to polish serially — ~500 host ``eigh`` calls *per candidate*).
+
+    Candidates are padded to a common edge count with masked zero-weight
+    dummy edges; fp32 loop with fp64 objective bookkeeping by default
+    (``dtype="float64"`` reproduces the host loop's arithmetic exactly,
+    modulo LAPACK backend differences in degenerate eigenspaces).
+    """
+    global _POLISH_VMAP
+    import jax.numpy as jnp
+
+    B = len(edge_lists)
+    if B == 0:
+        return []
+    if g0s is None:
+        g0s = [best_constant_weights(n, e) for e in edge_lists]
+    Emax = max(len(e) for e in edge_lists)
+    if Emax == 0:
+        return [np.zeros(0) for _ in edge_lists]
+    dt = np.float32 if dtype == "float32" else np.float64
+    ei = np.zeros((B, Emax), dtype=np.int32)
+    ej = np.zeros((B, Emax), dtype=np.int32)
+    mask = np.zeros((B, Emax), dtype=bool)
+    g0p = np.zeros((B, Emax), dtype=dt)
+    for k, (edges, g0) in enumerate(zip(edge_lists, g0s)):
+        E = len(edges)
+        if E:
+            ei[k, :E] = [i for i, _ in edges]
+            ej[k, :E] = [j for _, j in edges]
+            mask[k, :E] = True
+            g0p[k, :E] = np.asarray(g0, dtype=dt)
+    if _POLISH_VMAP is None:
+        _POLISH_VMAP = _polish_scan_factory()
+    best_g, _ = _POLISH_VMAP(
+        jnp.asarray(ei), jnp.asarray(ej), jnp.asarray(mask), jnp.asarray(g0p),
+        n, int(iters), bool(enforce_diag))
+    best_g = np.asarray(best_g, dtype=np.float64)
+    return [best_g[k, : len(edge_lists[k])] for k in range(B)]

@@ -1,0 +1,9 @@
+"""hop_bfs — fused reach-expansion step for matmul-BFS (warm-start SA).
+
+One BFS hop over every source at once: ``reach ← reach ∨ (reach @ Adj)``
+plus the row-wise reach count the ASPL accumulation needs, fused into a
+single pass. See ``kernel.py`` for the Pallas TPU implementation and
+``ref.py`` for the pure-jnp oracle (the default execution path, exactly
+like ``edge_laplacian``).
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the hop_bfs kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hop_step(reach, adj):
+    """One matmul-BFS hop: ``new = reach ∨ (reach @ Adj)``, plus the total
+    number of reached (src, dst) pairs in ``new``.
+
+    ``reach``/``adj``: (n, n) bool. The boolean matmul runs as f32 on the
+    MXU-friendly path — counts stay ≤ n, exact in f32 for any relevant n.
+    Returns ``(new_reach: bool (n, n), count: int32 scalar)``.
+    """
+    prod = jnp.dot(reach.astype(jnp.float32), adj.astype(jnp.float32))
+    new = reach | (prod > 0)
+    return new, jnp.sum(new, dtype=jnp.int32)

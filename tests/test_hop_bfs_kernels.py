@@ -1,0 +1,66 @@
+"""hop_bfs Pallas kernel vs the pure-jnp oracle (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.hop_bfs import ops, ref
+from repro.kernels.hop_bfs.kernel import LANE, SUBLANE, hop_step_2d
+
+
+def _random_adj(n, p, rng):
+    up = rng.random((n, n)) < p
+    adj = np.triu(up, 1)
+    return adj | adj.T
+
+
+@pytest.mark.parametrize("n,p", [(4, 0.6), (8, 0.4), (16, 0.25), (63, 0.1),
+                                 (64, 0.1), (129, 0.05)])
+def test_hop_step_kernel_matches_ref(n, p):
+    rng = np.random.default_rng(n)
+    adj = jnp.asarray(_random_adj(n, p, rng))
+    reach = jnp.eye(n, dtype=bool) | adj
+    new_ref, cnt_ref = ref.hop_step(reach, adj)
+    new_k, cnt_k = ops.hop_step(reach, adj, use_kernel=True)
+    assert (np.asarray(new_k) == np.asarray(new_ref)).all()
+    assert int(cnt_k) == int(cnt_ref) == int(np.asarray(new_ref).sum())
+
+
+def test_hop_step_fallback_below_two_nodes():
+    reach = jnp.ones((1, 1), dtype=bool)
+    adj = jnp.zeros((1, 1), dtype=bool)
+    new, cnt = ops.hop_step(reach, adj, use_kernel=True)
+    assert bool(new[0, 0]) and int(cnt) == 1
+
+
+def test_hop_step_monotone_and_fixed_point():
+    """reach only grows, and a saturated reach matrix is a fixed point."""
+    rng = np.random.default_rng(0)
+    adj = jnp.asarray(_random_adj(24, 0.15, rng))
+    reach = jnp.eye(24, dtype=bool) | adj
+    for _ in range(24):
+        new, _ = ops.hop_step(reach, adj, use_kernel=True)
+        assert bool(jnp.all(reach <= new))  # monotone
+        reach = new
+    again, cnt = ops.hop_step(reach, adj, use_kernel=True)
+    assert (np.asarray(again) == np.asarray(reach)).all()
+    assert int(cnt) == int(np.asarray(reach).sum())
+
+
+def test_hop_step_2d_padding_is_inert():
+    """Zero-padded rows/columns contribute nothing to matmul, OR, counts."""
+    n = 20
+    rng = np.random.default_rng(3)
+    adj = _random_adj(n, 0.2, rng)
+    reach = np.eye(n, dtype=bool) | adj
+    r_pad = -(-n // SUBLANE) * SUBLANE
+    c_pad = -(-n // LANE) * LANE
+    Rp = np.zeros((r_pad, c_pad), np.float32)
+    Ap = np.zeros((c_pad, c_pad), np.float32)
+    Rp[:n, :n] = reach
+    Ap[:n, :n] = adj
+    new, cnt = hop_step_2d(jnp.asarray(Rp), jnp.asarray(Ap))
+    new = np.asarray(new)
+    exp, _ = ref.hop_step(jnp.asarray(reach), jnp.asarray(adj))
+    assert (new[:n, :n] > 0).astype(bool).tolist() == np.asarray(exp).tolist()
+    assert not new[n:, :].any() and not new[:, n:].any()
+    assert int(np.asarray(cnt)[:n, 0].sum()) == int(np.asarray(exp).sum())

@@ -1,0 +1,167 @@
+"""Outer-pipeline performance stack (DESIGN.md §10): Lanczos spectral
+evaluation parity, batched device polish parity, and the device pipeline
+end-to-end against the host parity oracle."""
+import numpy as np
+import pytest
+
+from repro.core import ADMMConfig, BATopoConfig, optimize_topology
+from repro.core.graph import (
+    FAST_SPECTRAL_MIN_N, Topology, r_asym, r_asym_fast,
+    weight_matrix_from_weights,
+)
+from repro.core.topologies import hypercube, random_graph, ring, torus2d
+from repro.core.weights import (
+    asym_factor_from_g, metropolis_weights, polish_weights,
+    polish_weights_batched,
+)
+
+_FAST = BATopoConfig(admm=ADMMConfig(max_iters=200), sa_iters=300,
+                     polish_iters=200)
+
+
+# ---------------------------------------------------------------------------
+# Lanczos r_asym_fast vs the exact eigvalsh oracle
+# ---------------------------------------------------------------------------
+
+def _bcube_like_topology():
+    """A feasible graph on BCube-admissible edges only."""
+    from repro.core.api import _greedy_constraint_graph
+    from repro.core.constraints import bcube_constraints
+
+    cs = bcube_constraints(4, 2)  # n = 16
+    edges = _greedy_constraint_graph(16, 24, cs, np.random.default_rng(0))
+    g = metropolis_weights(16, edges)
+    return Topology(16, edges, g, name="bcube-like")
+
+
+@pytest.mark.parametrize("topo_fn", [
+    lambda: ring(16), lambda: ring(129), lambda: torus2d(64),
+    lambda: torus2d(225), lambda: hypercube(64), _bcube_like_topology,
+    lambda: random_graph(48, 100, seed=2),
+    lambda: random_graph(200, 500, seed=3),
+])
+def test_r_asym_fast_matches_eigvalsh(topo_fn):
+    W = topo_fn().W
+    assert abs(r_asym_fast(W) - r_asym(W)) <= 1e-8
+
+
+def test_r_asym_symmetric_hint_matches_detection():
+    W = torus2d(36).W
+    assert r_asym(W, symmetric=True) == pytest.approx(r_asym(W), abs=1e-14)
+
+
+def test_r_asym_non_doubly_stochastic_fallback():
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((12, 12))
+    A = (A + A.T) / 2  # symmetric but NOT doubly stochastic
+    n = A.shape[0]
+    expected = float(np.max(np.abs(
+        np.linalg.eigvalsh(A - np.ones((n, n)) / n))))
+    assert r_asym(A) == pytest.approx(expected, abs=1e-12)
+    assert r_asym_fast(A) == pytest.approx(expected, abs=1e-12)
+
+
+def test_topology_r_asym_routes_through_fast_path():
+    n = FAST_SPECTRAL_MIN_N + 8
+    t = random_graph(n, int(2.5 * n), seed=1)
+    exact = r_asym(t.W, symmetric=True)
+    assert abs(t.r_asym() - exact) <= 1e-8
+
+
+def test_asym_factor_fast_equals_exact():
+    t = random_graph(40, 90, seed=4)
+    exact = asym_factor_from_g(t.n, t.edges, t.g, fast=False)
+    fast = asym_factor_from_g(t.n, t.edges, t.g, fast=True)
+    assert abs(fast - exact) <= 1e-8
+    # identically r_asym(I − L)
+    assert exact == pytest.approx(
+        r_asym(weight_matrix_from_weights(t.n, t.edges, t.g)), abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Batched device polish vs the host loop
+# ---------------------------------------------------------------------------
+
+def test_polish_batched_fp64_matches_host():
+    n = 20
+    cands = [random_graph(n, 36, seed=s).edges for s in (0, 1)] + [ring(n).edges]
+    g0s = [metropolis_weights(n, e) for e in cands]
+    host = [polish_weights(n, e, g0, iters=150) for e, g0 in zip(cands, g0s)]
+    dev = polish_weights_batched(n, cands, g0s, iters=150, dtype="float64")
+    for e, h, d in zip(cands, host, dev):
+        fh = asym_factor_from_g(n, e, h, fast=False)
+        fd = asym_factor_from_g(n, e, d, fast=False)
+        assert abs(fd - fh) < 1e-7
+
+
+def test_polish_batched_fp32_objective_close():
+    n = 16
+    cands = [random_graph(n, 30, seed=s).edges for s in (2, 3)]
+    g0s = [metropolis_weights(n, e) for e in cands]
+    host = [polish_weights(n, e, g0, iters=150) for e, g0 in zip(cands, g0s)]
+    dev = polish_weights_batched(n, cands, g0s, iters=150, dtype="float32")
+    for e, h, d in zip(cands, host, dev):
+        fh = asym_factor_from_g(n, e, h, fast=False)
+        fd = asym_factor_from_g(n, e, d, fast=False)
+        assert abs(fd - fh) < 2e-3
+        assert np.all(d >= 0)
+
+
+def test_polish_batched_improves_metropolis():
+    n = 18
+    edges = random_graph(n, 34, seed=5).edges
+    g0 = metropolis_weights(n, edges)
+    (g,) = polish_weights_batched(n, [edges], [g0], iters=300)
+    assert (asym_factor_from_g(n, edges, g, fast=False)
+            <= asym_factor_from_g(n, edges, g0, fast=False) + 1e-9)
+
+
+def test_polish_batched_empty_inputs():
+    assert polish_weights_batched(5, []) == []
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: device pipeline vs host parity oracle
+# ---------------------------------------------------------------------------
+
+def test_device_pipeline_matches_host_quality():
+    host_cfg = BATopoConfig(admm=ADMMConfig(max_iters=200), sa_iters=300,
+                            polish_iters=200, restarts=2,
+                            warmstart="host", polish="host")
+    dev_cfg = BATopoConfig(admm=ADMMConfig(max_iters=200), sa_iters=300,
+                           polish_iters=200, restarts=2)
+    t_host = optimize_topology(12, 20, "homo", cfg=host_cfg)
+    t_dev = optimize_topology(12, 20, "homo", cfg=dev_cfg)
+    t_host.validate()
+    t_dev.validate()
+    assert t_dev.r <= 20
+    assert abs(t_dev.meta["r_asym"] - t_host.meta["r_asym"]) < 0.1
+
+
+def test_profile_collects_phase_breakdown():
+    prof: dict = {}
+    optimize_topology(10, 16, "homo", cfg=_FAST, profile=prof)
+    assert set(prof) == {"warm_s", "admm_s", "round_s", "polish_s", "eval_s"}
+    assert all(v >= 0.0 for v in prof.values())
+
+
+def test_pipeline_cfg_validation():
+    with pytest.raises(ValueError):
+        optimize_topology(8, 12, cfg=BATopoConfig(warmstart="gpu"))
+    with pytest.raises(ValueError):
+        optimize_topology(8, 12, cfg=BATopoConfig(polish="Device"))
+    with pytest.raises(ValueError):
+        optimize_topology(8, 12, cfg=BATopoConfig(polish_dtype="bf16"))
+
+
+def test_classic_candidates_skip_only_value_errors():
+    from repro.core.api import _classic_candidates
+
+    # n=6: hypercube raises ValueError (not a power of two) and must be
+    # skipped; ring/torus exist. All returned selections are boolean masks.
+    cands = _classic_candidates(6, 10, None)
+    names = [name for name, _ in cands]
+    assert any("ring" in s for s in names)
+    assert not any("hypercube" in s for s in names)
+    for _, sel in cands:
+        assert sel.dtype == bool and sel.sum() <= 10

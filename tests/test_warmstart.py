@@ -1,0 +1,117 @@
+"""Device SA warm start vs the host parity oracle (DESIGN.md §10).
+
+The device SA does not replicate the host RNG stream — trajectories
+differ — so parity is on *invariants* (degree preservation, feasibility,
+connectivity) and on solution quality (ASPL within tolerance), while the
+matmul-BFS ASPL itself must equal ``graph.aspl`` exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core.anneal import anneal_topology, greedy_degree_graph
+from repro.core.api import _greedy_constraint_graph
+from repro.core.constraints import bcube_constraints, intra_server_constraints
+from repro.core.graph import all_edges, aspl, degrees, edge_index, is_connected
+from repro.core.warmstart import anneal_topology_batched, aspl_matmul
+
+
+def _random_adjacency(n, p, rng):
+    up = rng.random((n, n)) < p
+    adj = np.triu(up, 1)
+    adj = adj | adj.T
+    return adj
+
+
+def _edges_of(adj):
+    return [tuple(e) for e in np.argwhere(np.triu(adj, 1)).tolist()]
+
+
+def test_aspl_matmul_matches_graph_aspl_exactly():
+    rng = np.random.default_rng(0)
+    for n, p in ((5, 0.5), (9, 0.3), (16, 0.2), (33, 0.15), (64, 0.08)):
+        for _ in range(3):
+            adj = _random_adjacency(n, p, rng)
+            edges = _edges_of(adj)
+            assert aspl_matmul(adj) == aspl(n, edges)  # == : bit-identical
+
+
+def test_aspl_matmul_disconnected_is_inf():
+    adj = np.zeros((8, 8), dtype=bool)
+    adj[0, 1] = adj[1, 0] = True
+    adj[2, 3] = adj[3, 2] = True
+    assert np.isinf(aspl_matmul(adj))
+    assert aspl(8, [(0, 1), (2, 3)]) == float("inf")
+
+
+def test_aspl_matmul_kernel_path_matches():
+    rng = np.random.default_rng(1)
+    adj = _random_adjacency(24, 0.2, rng)
+    assert aspl_matmul(adj, use_kernel=True) == aspl_matmul(adj)
+
+
+def test_device_sa_invariants_and_quality_homo():
+    n, iters = 16, 500
+    inits = [greedy_degree_graph(n, np.full(n, 4), np.random.default_rng(k))
+             for k in range(3)]
+    outs = anneal_topology_batched(n, inits, iters=iters, seeds=[1, 2, 3])
+    hosts = [anneal_topology(n, e0, iters=iters, seed=k + 1)
+             for k, e0 in enumerate(inits)]
+    for e0, dev, host in zip(inits, outs, hosts):
+        assert is_connected(n, dev)
+        # 2-swaps preserve the degree sequence exactly
+        assert (degrees(n, dev) == degrees(n, e0)).all()
+        # SA minimizes ASPL: never worse than the start, and within
+        # tolerance of the host oracle on the same instance
+        assert aspl(n, dev) <= aspl(n, e0) + 1e-12
+        assert abs(aspl(n, dev) - aspl(n, host)) < 0.25
+
+
+def test_device_sa_respects_inequality_constraints():
+    cs = intra_server_constraints(8)
+    inits, seeds = [], []
+    for k in range(4):  # collect a same-edge-count batch
+        e0 = _greedy_constraint_graph(8, 12, cs, np.random.default_rng(k))
+        if inits and len(e0) != len(inits[0]):
+            continue
+        inits.append(e0)
+        seeds.append(10 + k)
+    outs = anneal_topology_batched(8, inits[:2], cs, iters=300,
+                                   seeds=seeds[:2])
+    eidx = edge_index(8)
+    m = len(all_edges(8))
+    for dev in outs:
+        z = np.zeros(m, dtype=bool)
+        for e in dev:
+            z[eidx[e]] = True
+        assert cs.feasible(z)
+        assert is_connected(8, dev)
+
+
+def test_device_sa_respects_edge_admissibility():
+    cs = bcube_constraints(4, 2)  # n = 16, only one-hop pairs admissible
+    n = 16
+    inits = [_greedy_constraint_graph(n, 24, cs, np.random.default_rng(k + 7))
+             for k in range(2)]
+    if len(inits[0]) != len(inits[1]):
+        inits = [inits[0]]
+    outs = anneal_topology_batched(n, inits, cs, iters=250,
+                                   seeds=list(range(len(inits))))
+    eidx = edge_index(n)
+    m = len(all_edges(n))
+    for dev in outs:
+        z = np.zeros(m, dtype=bool)
+        for e in dev:
+            z[eidx[e]] = True
+        assert not z[~np.asarray(cs.edge_ok)].any()
+        assert cs.feasible(z)
+
+
+def test_device_sa_tiny_edge_sets_passthrough():
+    # fewer than 2 edges: no 2-swap exists; host loop bails, device mirrors
+    out = anneal_topology_batched(3, [[(0, 1)]], iters=50, seeds=[0])
+    assert out == [[(0, 1)]]
+
+
+def test_device_sa_batch_requires_equal_edge_counts():
+    with pytest.raises(AssertionError):
+        anneal_topology_batched(5, [[(0, 1), (1, 2)], [(0, 1)]], iters=10)
