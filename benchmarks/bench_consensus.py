@@ -1,5 +1,10 @@
 """Consensus speed vs wall-clock across topologies — paper Figs 1, 2, 4, 6.
 
+The whole baseline set (plus the BA-Topo budgets) is evaluated in ONE
+batched device dispatch: ``simulate_consensus_batched`` vmaps the consensus
+scan over the stacked weight matrices (``--engine host`` keeps the serial
+per-topology path as the parity oracle).
+
   PYTHONPATH=src python -m benchmarks.bench_consensus --scenario homo
   PYTHONPATH=src python -m benchmarks.bench_consensus --scenario node
   PYTHONPATH=src python -m benchmarks.bench_consensus --scenario intra --n 8
@@ -13,12 +18,17 @@ import json
 import numpy as np
 
 from repro.core import bcube_constraints, intra_server_constraints
-from repro.core.consensus import simulate_consensus, time_to_error
+from repro.core.consensus import (
+    simulate_consensus,
+    simulate_consensus_batched,
+    time_to_error,
+)
 
 from .common import NODE_BW_16, ba_topo, edge_b_min, paper_baselines
 
 
-def run(scenario: str, n: int, iters: int, sa_iters: int, seed: int) -> list[dict]:
+def run(scenario: str, n: int, iters: int, sa_iters: int, seed: int,
+        engine: str = "batched") -> list[dict]:
     cs = None
     node_bw = None
     if scenario == "node":
@@ -40,13 +50,19 @@ def run(scenario: str, n: int, iters: int, sa_iters: int, seed: int) -> list[dic
                         seed=seed, sa_iters=sa_iters)
             t.meta["label"] = f"ba-topo(r={len(t.edges)})"
             topos.append(t)
-        except Exception as e:
+        except ValueError as e:
             print(f"  [warn] ba-topo r={r}: {e}")
 
+    b_mins = [edge_b_min(t, scenario, node_bw=node_bw, cs=cs) for t in topos]
+    if engine == "batched":
+        traces = simulate_consensus_batched(topos, iters=iters, seed=seed,
+                                            b_mins=b_mins)
+    else:
+        traces = [simulate_consensus(t, iters=iters, b_min=bm, seed=seed)
+                  for t, bm in zip(topos, b_mins)]
+
     rows = []
-    for topo in topos:
-        b_min = edge_b_min(topo, scenario, node_bw=node_bw, cs=cs)
-        trace = simulate_consensus(topo, iters=iters, b_min=b_min, seed=seed)
+    for topo, b_min, trace in zip(topos, b_mins, traces):
         rows.append({
             "topology": topo.meta.get("label", topo.name),
             "edges": len(topo.edges),
@@ -67,13 +83,17 @@ def main(argv=None) -> None:
     ap.add_argument("--iters", type=int, default=400)
     ap.add_argument("--sa-iters", type=int, default=800)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="batched", choices=["batched", "host"],
+                    help="batched = one vmapped dispatch for the whole set "
+                         "(default); host = serial per-topology scans")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
     n = args.n or (8 if args.scenario == "intra" else 16)
 
     print(f"== consensus speed, scenario={args.scenario}, n={n} "
           f"(paper Fig {'1' if args.scenario == 'homo' else '2' if args.scenario == 'node' else '4' if args.scenario == 'intra' else '6'}) ==")
-    rows = run(args.scenario, n, args.iters, args.sa_iters, args.seed)
+    rows = run(args.scenario, n, args.iters, args.sa_iters, args.seed,
+               engine=args.engine)
     hdr = ["topology", "edges", "r_asym", "b_min", "t_iter_ms", "t_converge_ms"]
     print(" | ".join(f"{h:>22}" for h in hdr))
     for row in sorted(rows, key=lambda r: r["t_converge_ms"]):

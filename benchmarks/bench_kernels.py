@@ -44,6 +44,29 @@ def bench_gossip_mix(rows: list) -> None:
                      "ms_ref": round(_time(lambda: ref.gossip_mix(x, nbrs, w)), 2)})
 
 
+def bench_gossip_mix_batched(rows: list) -> None:
+    """All-workers batched gossip (one dispatch per leaf) vs the per-row
+    dispatch loop and the dense-W matmul, on real topology W matrices."""
+    from repro.core import make_baseline
+    from repro.dsgd.gossip import (gossip_sim_tree, gossip_sim_tree_rowloop,
+                                   padded_neighbors)
+    for name, n, shape in [("ring", 16, (4096,)), ("exponential", 16, (512, 64))]:
+        topo = make_baseline(name, n)
+        W = jnp.asarray(topo.W, jnp.float32)
+        nbr = padded_neighbors(W)
+        tree = {"p": jax.random.normal(jax.random.PRNGKey(0), (n,) + shape)}
+        out_b = gossip_sim_tree(tree, W, use_kernel=True, nbr=nbr)["p"]
+        out_r = gossip_sim_tree_rowloop(tree, W)["p"]
+        err = float(jnp.max(jnp.abs(out_b - out_r)))
+        rows.append({
+            "kernel": "gossip_mix_batched", "shape": f"{name}_n{n}_{shape}",
+            "deg": int(nbr[0].shape[1]), "max_err": err,
+            "ms_kernel": round(_time(
+                lambda: gossip_sim_tree(tree, W, use_kernel=True, nbr=nbr)["p"]), 2),
+            "ms_ref": round(_time(
+                lambda: gossip_sim_tree_rowloop(tree, W)["p"]), 2)})
+
+
 def bench_decode_attention(rows: list) -> None:
     from repro.kernels.decode_attention import ops, ref
     key = jax.random.PRNGKey(0)
@@ -87,6 +110,7 @@ def main(argv=None) -> None:
     rows: list = []
     print("== Pallas kernels vs jnp oracles (interpret mode) ==")
     bench_gossip_mix(rows)
+    bench_gossip_mix_batched(rows)
     bench_decode_attention(rows)
     bench_ssd_scan(rows)
     bad = [r for r in rows if r["max_err"] > 2e-2]

@@ -8,90 +8,44 @@ t_comp = 15.21 ms). The paper's headline — BA-Topo reaches the accuracy
 target in less modeled time than ring/grid/torus/exponential/equistatic —
 is reproduced if the speedup column is > 1 for the best BA row.
 
+Engines (``repro.dsgd.sim``, DESIGN.md §11):
+  scan  (default) one batched device call: the epoch loop is a jitted
+        ``lax.scan`` with on-device batch gathers, vmapped across the whole
+        stacked-topology set.
+  host  the seed per-iteration host loop (one step dispatch + ``jnp.stack``
+        per iteration, serial per topology) — fallback and parity oracle.
+  both  run host then scan on the SAME data/topologies and emit a compare
+        row (speedup, final-accuracy drift, ranking match).
+
+Gossip uses ``Topology.W`` (not ``weight_matrix_from_weights``), so
+W-override topologies — the directed exponential graph — mix with their
+actual weight matrix instead of silently degenerating to W = I.
+
   PYTHONPATH=src python -m benchmarks.bench_training_time --scenario homo
+  PYTHONPATH=src python -m benchmarks.bench_training_time --engine both --json-out rows.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import intra_server_constraints, bcube_constraints
 from repro.core.bandwidth import PaperConstants, t_epoch
-from repro.core.graph import weight_matrix_from_weights
 from repro.data import class_balanced_partition, make_classification_data
-from repro.dsgd.gossip import gossip_sim_tree
+from repro.dsgd.sim import DSGDSimConfig, accuracy_curve_host, accuracy_curves
 
 from .common import NODE_BW_16, ba_topo, edge_b_min, paper_baselines
 
 PC = PaperConstants()
 
 
-def _init_mlp(key, dim: int, hidden: int, classes: int) -> dict:
-    k1, k2 = jax.random.split(key)
-    s1 = 1.0 / np.sqrt(dim)
-    s2 = 1.0 / np.sqrt(hidden)
-    return {"w1": jax.random.uniform(k1, (dim, hidden), minval=-s1, maxval=s1),
-            "b1": jnp.zeros((hidden,)),
-            "w2": jax.random.uniform(k2, (hidden, classes), minval=-s2, maxval=s2),
-            "b2": jnp.zeros((classes,))}
-
-
-def _logits(p, x):
-    return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
-
-
-def _loss(p, x, y):
-    lp = jax.nn.log_softmax(_logits(p, x))
-    return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=1))
-
-
-def dsgd_accuracy_curve(topo, X, y, parts, Xte, yte, *, epochs: int, batch: int,
-                        lr: float, momentum: float, seed: int):
-    """Real DSGD on the stacked-worker layout; returns accuracy per epoch."""
-    n = topo.n
-    W = jnp.asarray(weight_matrix_from_weights(n, topo.edges, topo.g), jnp.float32)
-    key = jax.random.PRNGKey(seed)
-    p0 = _init_mlp(key, X.shape[1], 128, int(y.max()) + 1)
-    params = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), p0)
-    mom = jax.tree.map(jnp.zeros_like, params)
-
-    grad_fn = jax.vmap(jax.grad(_loss))
-
-    @jax.jit
-    def step(params, mom, xb, yb):
-        g = grad_fn(params, xb, yb)
-        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
-        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
-        params = gossip_sim_tree(params, W)
-        return params, mom
-
-    @jax.jit
-    def accuracy(params):
-        mean = jax.tree.map(lambda a: a.mean(axis=0), params)
-        pred = jnp.argmax(_logits(mean, Xte), axis=1)
-        return jnp.mean(pred == yte)
-
-    per = min(len(p) for p in parts)
-    iters = per // batch
-    accs = []
-    rng = np.random.default_rng(seed)
-    for _ in range(epochs):
-        orders = [rng.permutation(p)[: iters * batch] for p in parts]
-        for it in range(iters):
-            xb = jnp.stack([X[o[it * batch:(it + 1) * batch]] for o in orders])
-            yb = jnp.stack([y[o[it * batch:(it + 1) * batch]] for o in orders])
-            params, mom = step(params, mom, xb, yb)
-        accs.append(float(accuracy(params)))
-    return np.asarray(accs), iters
-
-
-def run(scenario: str, n: int, epochs: int, target: float, sa_iters: int,
-        seed: int) -> list[dict]:
+def build_setup(scenario: str, n: int, sa_iters: int, seed: int, prof: dict):
+    """Data + topology set shared by every engine; phases recorded in prof."""
     cs = None
     node_bw = None
     if scenario == "node":
@@ -101,15 +55,18 @@ def run(scenario: str, n: int, epochs: int, target: float, sa_iters: int,
     elif scenario == "bcube":
         cs = bcube_constraints(p=int(round(np.sqrt(n))), k=2)
 
+    t0 = time.time()
     X, y = make_classification_data(num_classes=10, dim=64,
                                     samples_per_class=400, seed=seed)
     Xte, yte = make_classification_data(num_classes=10, dim=64,
                                         samples_per_class=64, seed=seed,
                                         noise_seed=seed + 10_001)
     parts = class_balanced_partition(y, n, seed=seed)
-    Xj, yj = jnp.asarray(X), jnp.asarray(y)
-    Xtej, ytej = jnp.asarray(Xte), jnp.asarray(yte)
+    data = (jnp.asarray(X), jnp.asarray(y), parts,
+            jnp.asarray(Xte), jnp.asarray(yte))
+    prof["data_s"] = round(time.time() - t0, 3)
 
+    t0 = time.time()
     topos = paper_baselines(n, scenario)
     budgets = {"homo": (16, 24, 32), "node": (16, 32, 48),
                "intra": (8, 12, 16), "bcube": (24, 48)}[scenario]
@@ -119,35 +76,112 @@ def run(scenario: str, n: int, epochs: int, target: float, sa_iters: int,
                         sa_iters=sa_iters)
             t.meta["label"] = f"ba-topo(r={len(t.edges)})"
             topos.append(t)
-        except Exception as e:
+        except ValueError as e:
             print(f"  [warn] ba-topo r={r}: {e}")
+    prof["topo_s"] = round(time.time() - t0, 3)
+    return data, topos, node_bw, cs
+
+
+def train_curves(engine: str, topos, data, epochs: int, seed: int, prof: dict):
+    """Accuracy curves (T, epochs) for every topology under one engine."""
+    Xj, yj, parts, Xtej, ytej = data
+    cfg = DSGDSimConfig(epochs=epochs, batch=32, lr=0.05, momentum=0.9,
+                        seed=seed)
+    t0 = time.time()
+    if engine == "scan":
+        Ws = jnp.stack([jnp.asarray(t.W, jnp.float32) for t in topos])
+        accs, iters = accuracy_curves(Ws, Xj, yj, parts, Xtej, ytej, cfg)
+        accs = np.asarray(accs)
+    elif engine == "host":
+        curves = [accuracy_curve_host(jnp.asarray(t.W, jnp.float32),
+                                      Xj, yj, parts, Xtej, ytej, cfg)
+                  for t in topos]
+        accs = np.stack([c[0] for c in curves])
+        iters = curves[0][1]
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    prof["train_s"] = round(time.time() - t0, 3)
+    return accs, iters
+
+
+def run(scenario: str, n: int, epochs: int, target: float, sa_iters: int,
+        seed: int, engine: str = "scan", profile: dict | None = None,
+        _setup=None) -> list[dict]:
+    prof = {} if profile is None else profile
+    if _setup is None:
+        _setup = build_setup(scenario, n, sa_iters, seed, prof)
+    data, topos, node_bw, cs = _setup
+
+    accs, iters = train_curves(engine, topos, data, epochs, seed, prof)
 
     rows = []
-    for topo in topos:
-        accs, iters = dsgd_accuracy_curve(
-            topo, Xj, yj, parts, Xtej, ytej, epochs=epochs, batch=32,
-            lr=0.05, momentum=0.9, seed=seed)
+    for k, topo in enumerate(topos):
         b_min = edge_b_min(topo, scenario, node_bw=node_bw, cs=cs)
         epoch_ms = t_epoch(b_min, iters, PC)
-        hit = np.nonzero(accs >= target)[0]
+        a = accs[k]
+        hit = np.nonzero(a >= target)[0]
         rows.append({
             "topology": topo.meta.get("label", topo.name),
+            "engine": engine,
             "edges": len(topo.edges), "r_asym": round(float(topo.r_asym()), 3),
             "b_min": round(b_min, 2), "epoch_ms": round(epoch_ms, 1),
-            "final_acc": round(float(accs[-1]), 4),
+            "final_acc": round(float(a[-1]), 4),
             "t_target_s": round(float((hit[0] + 1) * epoch_ms / 1e3), 2)
             if hit.size else float("inf"),
         })
+    best_ba, best_other = _best_times(rows)
+    for r in rows:
+        r["speedup_vs_best_baseline"] = round(best_other / r["t_target_s"], 2) \
+            if np.isfinite(r["t_target_s"]) else 0.0
+    print(f"  [{engine}] BA-Topo best {best_ba}s vs best baseline "
+          f"{best_other}s → speedup "
+          f"{best_other / best_ba if np.isfinite(best_ba) else 0:.2f}×")
+    return rows
+
+
+def _best_times(rows: list[dict]) -> tuple[float, float]:
+    """(best BA-Topo, best baseline) modeled time-to-accuracy over a row set."""
     best_ba = min((r["t_target_s"] for r in rows if "ba-topo" in r["topology"]),
                   default=float("inf"))
     best_other = min((r["t_target_s"] for r in rows
                       if "ba-topo" not in r["topology"]), default=float("inf"))
-    for r in rows:
-        r["speedup_vs_best_baseline"] = round(best_other / r["t_target_s"], 2) \
-            if np.isfinite(r["t_target_s"]) else 0.0
-    print(f"  BA-Topo best {best_ba}s vs best baseline {best_other}s → "
-          f"speedup {best_other / best_ba if np.isfinite(best_ba) else 0:.2f}×")
-    return rows
+    return best_ba, best_other
+
+
+def _fin(x: float) -> float | None:
+    return round(float(x), 3) if np.isfinite(x) else None
+
+
+def _summary_row(scenario: str, n: int, epochs: int, engine: str,
+                 rows: list[dict], prof: dict, n_topos: int) -> dict:
+    best_ba, best_other = _best_times(rows)
+    total = prof.get("data_s", 0.0) + prof.get("topo_s", 0.0) + prof["train_s"]
+    return {"bench": "training", "scenario": scenario, "n": n,
+            "epochs": epochs, "engine": engine, "topologies": n_topos,
+            "data_s": prof.get("data_s"), "topo_s": prof.get("topo_s"),
+            "train_s": prof["train_s"], "total_s": round(total, 3),
+            "best_ba_t_s": _fin(best_ba),
+            "best_baseline_t_s": _fin(best_other),
+            "paper_speedup": _fin(best_other / best_ba)
+            if np.isfinite(best_ba) else None}
+
+
+def compare_row(scenario: str, n: int, epochs: int,
+                host: tuple[list[dict], dict],
+                scan: tuple[list[dict], dict]) -> dict:
+    """scan-vs-host acceptance row: wall-clock speedup, final-accuracy drift
+    vs the oracle, and whether the modeled time-to-accuracy ranking agrees."""
+    (h_rows, h_sum), (s_rows, s_sum) = host, scan
+    drift = max(abs(h["final_acc"] - s["final_acc"])
+                for h, s in zip(h_rows, s_rows))
+    rank = lambda rows: [r["topology"] for r in
+                         sorted(rows, key=lambda r: (r["t_target_s"], r["topology"]))]
+    return {"bench": "training", "scenario": scenario, "n": n,
+            "epochs": epochs, "engine": "scan-vs-host",
+            "train_speedup": round(h_sum["train_s"] / max(s_sum["train_s"], 1e-9), 2),
+            "total_speedup": round(h_sum["total_s"] / max(s_sum["total_s"], 1e-9), 2),
+            "max_final_acc_drift": round(drift, 6),
+            "ranking_match": rank(h_rows) == rank(s_rows)}
 
 
 def main(argv=None) -> None:
@@ -159,22 +193,47 @@ def main(argv=None) -> None:
     ap.add_argument("--target", type=float, default=0.8)
     ap.add_argument("--sa-iters", type=int, default=600)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="scan", choices=["scan", "host", "both"],
+                    help="scan = device-resident vmapped engine (default); "
+                         "host = seed per-iteration loop (parity oracle); "
+                         "both = run host then scan + a compare row")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
     n = args.n or (8 if args.scenario == "intra" else 16)
 
     print(f"== DSGD time-to-accuracy, scenario={args.scenario}, n={n} "
           f"(paper Table II) ==")
-    rows = run(args.scenario, n, args.epochs, args.target, args.sa_iters,
-               args.seed)
+    prof_setup: dict = {}
+    setup = build_setup(args.scenario, n, args.sa_iters, args.seed, prof_setup)
+    engines = ["host", "scan"] if args.engine == "both" else [args.engine]
+
+    all_rows: list[dict] = []
+    per_engine: dict[str, tuple[list[dict], dict]] = {}
     hdr = ["topology", "edges", "r_asym", "b_min", "epoch_ms", "final_acc",
            "t_target_s", "speedup_vs_best_baseline"]
-    print(" | ".join(f"{h:>18}" for h in hdr))
-    for row in sorted(rows, key=lambda r: r["t_target_s"]):
-        print(" | ".join(f"{str(row[h]):>18}" for h in hdr))
+    for engine in engines:
+        prof = dict(prof_setup)
+        rows = run(args.scenario, n, args.epochs, args.target, args.sa_iters,
+                   args.seed, engine=engine, profile=prof, _setup=setup)
+        srow = _summary_row(args.scenario, n, args.epochs, engine, rows, prof,
+                            len(setup[1]))
+        per_engine[engine] = (rows, srow)
+        all_rows += rows + [srow]
+        print(f"  -- engine={engine}: train {prof['train_s']}s "
+              f"(data {prof['data_s']}s, topo {prof['topo_s']}s) --")
+        print(" | ".join(f"{h:>18}" for h in hdr))
+        for row in sorted(rows, key=lambda r: r["t_target_s"]):
+            print(" | ".join(f"{str(row[h]):>18}" for h in hdr))
+
+    if args.engine == "both":
+        crow = compare_row(args.scenario, n, args.epochs,
+                           per_engine["host"], per_engine["scan"])
+        all_rows.append(crow)
+        print("  " + json.dumps(crow))
+
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(all_rows, f, indent=1)
 
 
 if __name__ == "__main__":

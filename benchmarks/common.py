@@ -36,8 +36,8 @@ def paper_baselines(n: int, scenario: str) -> list[Topology]:
             t = make_baseline("equistatic", n, M=M)
             t.meta["label"] = f"u-equistatic(r={len(t.edges)})"
             out.append(t)
-        except Exception:
-            pass
+        except ValueError:
+            pass  # EquiStatic is only defined for n where a valid M-decomposition exists
     return out
 
 

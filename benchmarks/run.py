@@ -27,11 +27,12 @@ def main(argv=None) -> None:
                     help="paper-scale settings (slow: ~1h)")
     ap.add_argument("--json", default=None, metavar="BENCH_admm.json",
                     help="run ONLY the tracked perf benchmarks (ADMM solver "
-                         "grid + outer-pipeline phase breakdown) and write "
-                         "their machine-readable rows (n, solver, psd_backend, "
+                         "grid + outer-pipeline phase breakdown + DSGD "
+                         "training-engine compare) and write their "
+                         "machine-readable rows (n, solver, psd_backend, "
                          "dtype, ms_per_iter, cg_per_step, r_asym, phase "
-                         "timings, …) to this path — the perf trajectory file "
-                         "committed across PRs")
+                         "timings, train_speedup, …) to this path — the perf "
+                         "trajectory file committed across PRs")
     args = ap.parse_args(argv)
     os.makedirs(ART, exist_ok=True)
     quick = not args.full
@@ -40,22 +41,30 @@ def main(argv=None) -> None:
         import json as _json
         import tempfile
 
-        from . import bench_admm, bench_pipeline
+        from . import bench_admm, bench_pipeline, bench_training_time
         # Fixed, quick configuration so rows stay comparable across PRs:
         # backend×driver grid at n=16/32 + the fast-compare row at n=64,
-        # plus the end-to-end outer-pipeline rows (device vs host phase
-        # breakdown at the ISSUE-3 acceptance point: n=64, 4 restarts).
+        # the end-to-end outer-pipeline rows (device vs host phase
+        # breakdown at the ISSUE-3 acceptance point: n=64, 4 restarts),
+        # and the DSGD training-engine compare at the ISSUE-4 acceptance
+        # point (homo, n=16, default epochs; host oracle vs scan engine —
+        # only the engine-level summary/compare rows are tracked, the
+        # per-topology accuracy rows stay in the artifacts).
         with tempfile.TemporaryDirectory() as td:
             bench_admm.main(["--nodes", "16,32", "--iters", "60",
                              "--fast-nodes", "64",
                              "--json-out", f"{td}/admm.json"])
             bench_pipeline.main(["--nodes", "64", "--restarts", "4",
                                  "--json-out", f"{td}/pipeline.json"])
+            bench_training_time.main(["--scenario", "homo", "--engine", "both",
+                                      "--json-out", f"{td}/training.json"])
             rows = (_json.load(open(f"{td}/admm.json"))
-                    + _json.load(open(f"{td}/pipeline.json")))
+                    + _json.load(open(f"{td}/pipeline.json"))
+                    + [r for r in _json.load(open(f"{td}/training.json"))
+                       if r.get("bench") == "training"])
         with open(args.json, "w") as f:
             _json.dump(rows, f, indent=1)
-        print(f"tracked ADMM + pipeline perf rows written to {args.json}")
+        print(f"tracked ADMM + pipeline + training perf rows written to {args.json}")
         return
 
     from . import (bench_admm, bench_compression, bench_consensus,

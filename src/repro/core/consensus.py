@@ -8,6 +8,8 @@ code path is exercised by tests and benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +18,8 @@ import numpy as np
 from .bandwidth import PaperConstants, t_iter
 from .graph import Topology
 
-__all__ = ["ConsensusTrace", "simulate_consensus", "time_to_error"]
+__all__ = ["ConsensusTrace", "simulate_consensus", "simulate_consensus_batched",
+           "time_to_error"]
 
 
 @dataclass
@@ -53,6 +56,61 @@ def simulate_consensus(
     ti = t_iter(b_min, const) if b_min is not None else float("nan")
     times = np.arange(iters + 1) * (ti if np.isfinite(ti) else 1.0)
     return ConsensusTrace(errors=errors, t_iter_ms=ti, times_ms=times, topology=topo.name)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _consensus_errors_batched(Ws, x0, iters: int):
+    """Stacked Ws (T, n, n), shared x0 (n, dim) → errors (T, iters+1).
+
+    The per-topology scan is the SAME step body as :func:`simulate_consensus`
+    vmapped over the leading topology axis — the whole baseline set runs as
+    one device dispatch instead of T serial scans."""
+    def one(W):
+        def step(x, _):
+            xn = W @ x
+            xbar = jnp.mean(xn, axis=0, keepdims=True)
+            return xn, jnp.linalg.norm(xn - xbar)
+        _, errs = jax.lax.scan(step, x0, None, length=iters)
+        return errs
+
+    e0 = jnp.linalg.norm(x0 - jnp.mean(x0, axis=0, keepdims=True))
+    errs = jax.vmap(one)(Ws)                       # (T, iters)
+    e0s = jnp.broadcast_to(e0[None, None], (Ws.shape[0], 1))
+    return jnp.concatenate([e0s, errs], axis=1)
+
+
+def simulate_consensus_batched(
+    topos: Sequence[Topology],
+    iters: int = 200,
+    dim: int = 16,
+    seed: int = 0,
+    b_mins: Sequence[float | None] | None = None,
+    const: PaperConstants = PaperConstants(),
+) -> list[ConsensusTrace]:
+    """Vmapped :func:`simulate_consensus` over a same-``n`` topology set.
+
+    All topologies share the initial values (one seed, like calling the
+    serial version with the same seed per topology), so traces match the
+    serial path to fp64 round-off. Returns one :class:`ConsensusTrace` per
+    topology, in order."""
+    if not topos:
+        return []
+    n = topos[0].n
+    if any(t.n != n for t in topos):
+        raise ValueError("simulate_consensus_batched requires equal n "
+                         f"(got {[t.n for t in topos]})")
+    Ws = jnp.stack([jnp.asarray(t.W, dtype=jnp.float64) for t in topos])
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.normal(key, (n, dim), dtype=jnp.float64)
+    errors = np.asarray(_consensus_errors_batched(Ws, x0, iters))
+    traces = []
+    for k, topo in enumerate(topos):
+        bm = None if b_mins is None else b_mins[k]
+        ti = t_iter(bm, const) if bm is not None else float("nan")
+        times = np.arange(iters + 1) * (ti if np.isfinite(ti) else 1.0)
+        traces.append(ConsensusTrace(errors=errors[k], t_iter_ms=ti,
+                                     times_ms=times, topology=topo.name))
+    return traces
 
 
 def time_to_error(trace: ConsensusTrace, target: float = 1e-4) -> float:

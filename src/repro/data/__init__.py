@@ -2,6 +2,7 @@
 from .pipeline import (
     DataConfig,
     class_balanced_partition,
+    epoch_permutations,
     make_classification_data,
     synthetic_batches,
     synthetic_lm_batch,
@@ -9,6 +10,7 @@ from .pipeline import (
 )
 
 __all__ = [
-    "DataConfig", "class_balanced_partition", "make_classification_data",
-    "synthetic_batches", "synthetic_lm_batch", "token_pipeline",
+    "DataConfig", "class_balanced_partition", "epoch_permutations",
+    "make_classification_data", "synthetic_batches", "synthetic_lm_batch",
+    "token_pipeline",
 ]

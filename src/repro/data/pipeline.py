@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["DataConfig", "token_pipeline", "synthetic_lm_batch", "synthetic_batches",
-           "make_classification_data", "class_balanced_partition"]
+           "make_classification_data", "class_balanced_partition",
+           "epoch_permutations"]
 
 
 @dataclass(frozen=True)
@@ -100,14 +101,40 @@ def make_classification_data(num_classes: int = 10, dim: int = 64,
     rng = np.random.default_rng(seed)
     means = rng.normal(size=(num_classes, dim)) * class_sep / np.sqrt(dim)
     rng = np.random.default_rng(seed if noise_seed is None else noise_seed)
-    X, y = [], []
-    for c in range(num_classes):
-        X.append(means[c] + rng.normal(size=(samples_per_class, dim)))
-        y.append(np.full(samples_per_class, c, np.int32))
-    X = np.concatenate(X).astype(np.float32)
-    y = np.concatenate(y)
+    # one (C, S, D) draw consumes the PCG64 stream exactly like C sequential
+    # (S, D) draws, so this stays bit-identical to the seed per-class loop
+    noise = rng.normal(size=(num_classes, samples_per_class, dim))
+    X = (means[:, None, :] + noise).reshape(-1, dim).astype(np.float32)
+    y = np.repeat(np.arange(num_classes, dtype=np.int32), samples_per_class)
     perm = rng.permutation(len(y))
     return X[perm], y[perm]
+
+
+def epoch_permutations(parts: list[np.ndarray], epochs: int, batch: int,
+                       seed: int = 0) -> np.ndarray:
+    """Per-worker minibatch gather indices for a whole training run, as ONE
+    int tensor of shape ``(epochs, iters, n, batch)`` (``iters`` = shared
+    iterations per epoch = min partition length // batch).
+
+    ``out[e, it, w]`` indexes the global X/y arrays for worker ``w``'s
+    ``it``-th minibatch of epoch ``e`` — the device-resident engine gathers
+    batches inside its scan (``X[idx]``) instead of host-assembling a
+    ``jnp.stack`` per step. Index generation itself stays on the host
+    numpy Generator, consuming the SAME stream as the per-epoch loop
+    (``rng.permutation(part)`` per worker per epoch), so batch order is
+    bit-identical to the host oracle given a seed. int32: device gather
+    indices, and every consumer traces one dtype.
+    """
+    n = len(parts)
+    per = min(len(p) for p in parts)
+    iters = per // batch
+    rng = np.random.default_rng(seed)
+    out = np.empty((epochs, iters, n, batch), np.int32)
+    for e in range(epochs):
+        for w, p in enumerate(parts):
+            order = rng.permutation(p)[: iters * batch]
+            out[e, :, w, :] = order.reshape(iters, batch)
+    return out
 
 
 def class_balanced_partition(y: np.ndarray, n_nodes: int, seed: int = 0) -> list[np.ndarray]:

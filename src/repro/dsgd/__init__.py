@@ -10,7 +10,19 @@ from .compression import (
     top_k_compressor,
 )
 from .dynamic import cycle_contraction, round_robin_schedules
-from .gossip import gossip_shard, gossip_sim, gossip_sim_tree
+from .gossip import (
+    gossip_shard,
+    gossip_sim,
+    gossip_sim_tree,
+    gossip_sim_tree_rowloop,
+    padded_neighbors,
+)
+from .sim import (
+    DSGDSimConfig,
+    accuracy_curve_host,
+    accuracy_curves,
+    accuracy_curves_seeds,
+)
 from .trainer import (
     DSGDState,
     allreduce_train_step,
@@ -24,6 +36,9 @@ from .trainer import (
 __all__ = [
     "GossipSchedule", "bytes_per_sync", "reconstruct_weight_matrix",
     "schedule_from_topology", "gossip_shard", "gossip_sim", "gossip_sim_tree",
+    "gossip_sim_tree_rowloop", "padded_neighbors",
+    "DSGDSimConfig", "accuracy_curve_host", "accuracy_curves",
+    "accuracy_curves_seeds",
     "ChocoState", "choco_gamma", "choco_gossip_init", "choco_gossip_step",
     "identity_compressor", "random_k_compressor", "top_k_compressor",
     "cycle_contraction", "round_robin_schedules",

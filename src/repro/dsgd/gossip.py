@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from .schedule import GossipSchedule
 
-__all__ = ["gossip_shard", "gossip_sim", "gossip_sim_tree"]
+__all__ = ["gossip_shard", "gossip_sim", "gossip_sim_tree",
+           "gossip_sim_tree_rowloop", "padded_neighbors"]
 
 
 def gossip_shard(tree, sched: GossipSchedule, axis):
@@ -52,15 +53,57 @@ def gossip_sim(x: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
     return out.astype(x.dtype)
 
 
-def gossip_sim_tree(tree, W: jnp.ndarray, *, use_kernel: bool = False):
+def padded_neighbors(W) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fixed max-degree padded neighbor indexing for a CONCRETE gossip matrix.
+
+    Returns ``(nbr_idx (n, deg) int32, weights (n, deg+1) float32)`` where
+    ``deg`` is the graph's maximum degree, ``weights[:, 0]`` is the self
+    weight and padded slots gather the row itself with weight 0 (so the mix
+    is exact for every degree). Build this ONCE from a concrete W at step-
+    construction time; the batched mixing itself is then trace-safe.
+    """
+    Wnp = np.asarray(W)
+    n = Wnp.shape[0]
+    off = Wnp.copy()
+    np.fill_diagonal(off, 0.0)
+    rows = [np.nonzero(off[i])[0] for i in range(n)]
+    deg = max((len(r) for r in rows), default=0) or 1
+    nbr_idx = np.empty((n, deg), np.int32)
+    weights = np.zeros((n, deg + 1), np.float32)
+    for i, r in enumerate(rows):
+        nbr_idx[i, :len(r)] = r
+        nbr_idx[i, len(r):] = i
+        weights[i, 0] = Wnp[i, i]
+        weights[i, 1:1 + len(r)] = off[i, r]
+    return jnp.asarray(nbr_idx), jnp.asarray(weights)
+
+
+def gossip_sim_tree(tree, W: jnp.ndarray, *, use_kernel: bool = False,
+                    nbr: tuple[jnp.ndarray, jnp.ndarray] | None = None):
     """Leaf-wise gossip over stacked (n, ...) parameter pytrees.
 
-    use_kernel routes through the Pallas ``gossip_mix`` kernel per worker row
-    (interpret mode on CPU; fused VMEM kernel on TPU).
+    use_kernel routes through the Pallas ``gossip_mix_batched`` kernel — ONE
+    dispatch per leaf covering all n workers over the padded neighbor-index
+    matrix (interpret mode on CPU; fused VMEM kernel on TPU). Pass
+    ``nbr=padded_neighbors(W)`` precomputed when calling from inside a trace
+    (W must be concrete to derive the sparsity pattern).
     """
     if not use_kernel:
         return jax.tree.map(lambda x: gossip_sim(x, W), tree)
 
+    from repro.kernels.gossip_mix.ops import gossip_mix_batched
+
+    nbr_idx, weights = padded_neighbors(W) if nbr is None else nbr
+    return jax.tree.map(lambda x: gossip_mix_batched(x, nbr_idx, weights), tree)
+
+
+def gossip_sim_tree_rowloop(tree, W: jnp.ndarray):
+    """Per-worker-row ``gossip_mix`` dispatch loop — the parity oracle for
+    ``gossip_sim_tree(use_kernel=True)``.
+
+    O(n) kernel dispatches per leaf, one jit variant per distinct neighbor
+    count, host read of W — kept only to pin down the batched path's
+    numerics (tests) and as the dispatch-cost baseline (bench_kernels)."""
     from repro.kernels.gossip_mix.ops import gossip_mix
 
     n = W.shape[0]

@@ -1,0 +1,244 @@
+"""Device-resident DSGD evaluation engine (paper §VI — Table II, Figs 7–10).
+
+Mirrors the ``core/engine.py`` architecture for the *training-side*
+evaluation loop: where the seed benchmark ran a host Python loop per
+training iteration (one jitted step dispatch + a host-side ``jnp.stack``
+batch assembly per step, one ``float()`` sync per epoch, serial per
+topology), this module compiles the entire run into one device program:
+
+  - ``train_curve``          — jitted ``lax.scan`` over epochs with an inner
+    scan over iterations; minibatches are GATHERED inside the scan
+    (``X[idx]``) from the device-resident dataset via the precomputed
+    ``(epochs, iters, n, batch)`` permutation tensor
+    (``repro.data.epoch_permutations``), and the mean-model test accuracy is
+    evaluated at epoch boundaries inside the scan — zero host round-trips
+    between epochs.
+  - ``accuracy_curves``      — every topology trains the same model on the
+    same data with the same hyperparameters, so the ``(n, n)`` gossip
+    matrices are stacked ``(T, n, n)`` and the WHOLE training run is
+    ``jax.vmap``-ed across topologies: the serial per-topology loop of the
+    benchmark becomes one batched device call.
+  - ``accuracy_curves_seeds``— same trick one axis up: vmap over seeds
+    (per-seed init + batch order) × topologies in one dispatch.
+  - ``accuracy_curve_host``  — the seed per-iteration host loop, kept
+    verbatim as the ``engine="host"`` fallback and the parity oracle
+    (identical batch order by construction: both consume
+    ``epoch_permutations``'s numpy stream).
+
+The model is the benchmark's 2-layer-MLP CIFAR stand-in (``init_mlp`` /
+``mlp_logits`` / ``mlp_loss``), exposed here so benchmarks and tests share
+one definition. See DESIGN.md §11.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.data import epoch_permutations
+
+from .gossip import gossip_sim_tree
+
+__all__ = [
+    "DSGDSimConfig", "init_mlp", "mlp_logits", "mlp_loss",
+    "train_curve", "accuracy_curves", "accuracy_curves_seeds",
+    "accuracy_curve_host",
+]
+
+
+@dataclass(frozen=True)
+class DSGDSimConfig:
+    """Hyperparameters of the §VI-B time-to-accuracy protocol."""
+    epochs: int = 30
+    batch: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+    hidden: int = 128
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# model: 2-layer MLP on the Gaussian-mixture task (CIFAR-10 stand-in)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, dim: int, hidden: int, classes: int) -> dict:
+    """Explicitly float32: with the solver's ``jax_enable_x64`` active, the
+    dtype-less seed init silently promoted the whole training loop to f64
+    (~2× slower per step on CPU for identical curves)."""
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / np.sqrt(dim)
+    s2 = 1.0 / np.sqrt(hidden)
+    return {"w1": jax.random.uniform(k1, (dim, hidden), jnp.float32,
+                                     minval=-s1, maxval=s1),
+            "b1": jnp.zeros((hidden,), jnp.float32),
+            "w2": jax.random.uniform(k2, (hidden, classes), jnp.float32,
+                                     minval=-s2, maxval=s2),
+            "b2": jnp.zeros((classes,), jnp.float32)}
+
+
+def mlp_logits(p, x):
+    return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def mlp_loss(p, x, y):
+    lp = jax.nn.log_softmax(mlp_logits(p, x))
+    return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=1))
+
+
+def _init_worker_state(n: int, dim: int, classes: int, cfg: DSGDSimConfig):
+    """All workers start from identical params (standard DSGD init)."""
+    p0 = init_mlp(jax.random.PRNGKey(cfg.seed), dim, cfg.hidden, classes)
+    params = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), p0)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    return params, mom
+
+
+# ---------------------------------------------------------------------------
+# scan-compiled core
+# ---------------------------------------------------------------------------
+
+def _train_curve_impl(W, X, y, Xte, yte, perm, params, mom, lr, momentum):
+    """One full DSGD run → per-epoch mean-model accuracy (epochs,).
+
+    W (n, n); X (N, d)/y (N,) device-resident train set; Xte/yte test split;
+    perm (epochs, iters, n, batch) gather indices; params/mom stacked
+    (n, ...) worker state. Pure — jit/vmap applied by the public wrappers.
+    """
+    grad_fn = jax.vmap(jax.grad(mlp_loss))
+
+    def it_body(carry, idx):                      # idx: (n, batch)
+        params, mom = carry
+        xb, yb = X[idx], y[idx]                   # on-device batch gather
+        g = grad_fn(params, xb, yb)
+        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        params = gossip_sim_tree(params, W)
+        return (params, mom), None
+
+    def epoch_body(carry, perm_e):                # perm_e: (iters, n, batch)
+        carry, _ = lax.scan(it_body, carry, perm_e)
+        mean = jax.tree.map(lambda a: a.mean(axis=0), carry[0])
+        pred = jnp.argmax(mlp_logits(mean, Xte), axis=1)
+        return carry, jnp.mean(pred == yte)
+
+    _, accs = lax.scan(epoch_body, (params, mom), perm)
+    return accs
+
+
+_train_curve_jit = jax.jit(_train_curve_impl)
+# topologies share data/init/batch order → only W is batched
+_train_curves_vmapped = jax.jit(jax.vmap(
+    _train_curve_impl,
+    in_axes=(0, None, None, None, None, None, None, None, None, None)))
+# seeds batch the init AND the batch order on top of the topology axis
+_train_curves_seeds_vmapped = jax.jit(jax.vmap(
+    jax.vmap(_train_curve_impl,
+             in_axes=(0, None, None, None, None, None, None, None, None, None)),
+    in_axes=(None, None, None, None, None, 0, 0, 0, None, None)))
+
+
+def train_curve(W, X, y, Xte, yte, perm, cfg: DSGDSimConfig = DSGDSimConfig()):
+    """Scan-compiled run for ONE topology; returns accs (epochs,)."""
+    n = W.shape[-1]
+    classes = int(np.asarray(y).max()) + 1
+    params, mom = _init_worker_state(n, X.shape[-1], classes, cfg)
+    return _train_curve_jit(W, X, y, Xte, yte, jnp.asarray(perm), params, mom,
+                            cfg.lr, cfg.momentum)
+
+
+def accuracy_curves(Ws, X, y, parts, Xte, yte,
+                    cfg: DSGDSimConfig = DSGDSimConfig()):
+    """Train ALL topologies in one batched device call.
+
+    Ws: (T, n, n) stacked gossip matrices (or (n, n) for a single run).
+    Returns (accs (T, epochs) [or (epochs,)], iters_per_epoch).
+    """
+    Ws = jnp.asarray(Ws, jnp.float32)
+    n = Ws.shape[-1]
+    perm = jnp.asarray(epoch_permutations(parts, cfg.epochs, cfg.batch,
+                                          seed=cfg.seed))
+    iters = perm.shape[1]
+    classes = int(np.asarray(y).max()) + 1
+    params, mom = _init_worker_state(n, X.shape[-1], classes, cfg)
+    fn = _train_curve_jit if Ws.ndim == 2 else _train_curves_vmapped
+    accs = fn(Ws, X, y, Xte, yte, perm, params, mom, cfg.lr, cfg.momentum)
+    return accs, iters
+
+
+def accuracy_curves_seeds(Ws, X, y, parts, Xte, yte, seeds,
+                          cfg: DSGDSimConfig = DSGDSimConfig()):
+    """Seeds × topologies in one dispatch; returns (accs (S, T, epochs), iters).
+
+    Each seed draws its own init and batch order (the §VI-B repeat-runs
+    protocol); topologies within a seed share both.
+    """
+    Ws = jnp.asarray(Ws, jnp.float32)
+    n = Ws.shape[-1]
+    classes = int(np.asarray(y).max()) + 1
+    perms, params, moms = [], [], []
+    for s in seeds:
+        c = dataclasses.replace(cfg, seed=int(s))
+        perms.append(epoch_permutations(parts, c.epochs, c.batch, seed=c.seed))
+        p, m = _init_worker_state(n, X.shape[-1], classes, c)
+        params.append(p)
+        moms.append(m)
+    perm = jnp.asarray(np.stack(perms))
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    accs = _train_curves_seeds_vmapped(Ws, X, y, Xte, yte, perm,
+                                       stack(params), stack(moms),
+                                       cfg.lr, cfg.momentum)
+    return accs, perm.shape[2]
+
+
+# ---------------------------------------------------------------------------
+# host-loop oracle (the seed benchmark path, verbatim)
+# ---------------------------------------------------------------------------
+
+def accuracy_curve_host(W, X, y, parts, Xte, yte,
+                        cfg: DSGDSimConfig = DSGDSimConfig()):
+    """Per-iteration host loop: one jitted step dispatch + host ``jnp.stack``
+    batch assembly per step, one accuracy sync per epoch — the ``engine="host"``
+    fallback and the parity oracle for :func:`accuracy_curves`.
+
+    Consumes the SAME ``epoch_permutations`` index stream as the scan engine,
+    so batch order is identical given a seed. Returns (accs (epochs,), iters).
+    """
+    W = jnp.asarray(W, jnp.float32)
+    n = W.shape[-1]
+    classes = int(np.asarray(y).max()) + 1
+    params, mom = _init_worker_state(n, X.shape[-1], classes, cfg)
+    lr, momentum = cfg.lr, cfg.momentum
+
+    grad_fn = jax.vmap(jax.grad(mlp_loss))
+
+    @jax.jit
+    def step(params, mom, xb, yb):
+        g = grad_fn(params, xb, yb)
+        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        params = gossip_sim_tree(params, W)
+        return params, mom
+
+    @jax.jit
+    def accuracy(params):
+        mean = jax.tree.map(lambda a: a.mean(axis=0), params)
+        pred = jnp.argmax(mlp_logits(mean, Xte), axis=1)
+        return jnp.mean(pred == yte)
+
+    perm = epoch_permutations(parts, cfg.epochs, cfg.batch, seed=cfg.seed)
+    iters = perm.shape[1]
+    accs = []
+    for e in range(cfg.epochs):
+        for it in range(iters):
+            idx = perm[e, it]                     # (n, batch)
+            # per-worker device gathers + host jnp.stack, as the seed bench
+            xb = jnp.stack([X[idx[w]] for w in range(n)])
+            yb = jnp.stack([y[idx[w]] for w in range(n)])
+            params, mom = step(params, mom, xb, yb)
+        accs.append(float(accuracy(params)))
+    return np.asarray(accs), iters

@@ -31,7 +31,7 @@ from repro.core.graph import Topology, weight_matrix_from_weights
 from repro.models import transformer
 from repro.optim import apply_updates
 
-from .gossip import gossip_shard, gossip_sim_tree
+from .gossip import gossip_shard, gossip_sim_tree, padded_neighbors
 from .schedule import GossipSchedule, schedule_from_topology
 
 __all__ = ["DSGDState", "init_dsgd_state", "dsgd_train_step", "allreduce_train_step",
@@ -72,13 +72,14 @@ def dsgd_train_step(cfg, topo: Topology, opt_update: Callable, *,
     W = jnp.asarray(weight_matrix_from_weights(topo.n, topo.edges, topo.g),
                     jnp.float32)
     loss_fn = _loss_fn(cfg)
+    nbr = padded_neighbors(W) if use_kernel else None
 
     @jax.jit
     def step(state: DSGDState, batch):
         losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(state.params, batch)
         updates, opt = jax.vmap(opt_update)(grads, state.opt, state.params)
         params = jax.vmap(apply_updates)(state.params, updates)
-        params = gossip_sim_tree(params, W, use_kernel=use_kernel)
+        params = gossip_sim_tree(params, W, use_kernel=use_kernel, nbr=nbr)
         metrics = {"loss": losses.mean(), "loss_max": losses.max(),
                    "consensus_err": _consensus_error(params)}
         return DSGDState(params, opt, state.step + 1), metrics
@@ -149,7 +150,6 @@ def make_matmul_gossip_train_step(cfg, topo: Topology, opt_update: Callable, *,
     W = jnp.asarray(weight_matrix_from_weights(topo.n, topo.edges, topo.g),
                     jnp.float32)
     loss_fn = _loss_fn(cfg)
-    from .gossip import gossip_sim_tree
 
     def train_step(state: DSGDState, batch):
         losses, grads = jax.vmap(

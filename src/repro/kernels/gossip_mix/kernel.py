@@ -31,6 +31,44 @@ LANE = 1024     # last-dim tile (multiple of 128)
 SUBLANE = 8     # second-to-last dim tile
 
 
+def _gossip_mix_batched_kernel(w_ref, self_ref, nbrs_ref, out_ref):
+    """w: (1, deg+1); self/out: (1, SUBLANE, LANE); nbrs: (1, deg, SUBLANE, LANE).
+
+    One grid step = one worker's tile. The worker axis is a grid dimension,
+    so the WHOLE stacked (n, ...) parameter tensor is mixed by a single
+    ``pallas_call`` — n× fewer dispatches than the per-row path, and ``deg``
+    is the topology's max degree (padded rows carry weight 0).
+    """
+    deg = nbrs_ref.shape[1]
+    acc = self_ref[0].astype(jnp.float32) * w_ref[0, 0]
+    for d in range(deg):  # static max degree — unrolls to VPU fmas
+        acc = acc + nbrs_ref[0, d].astype(jnp.float32) * w_ref[0, d + 1]
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix_batched_2d(x, nbrs, weights, *, interpret: bool = True):
+    """All-workers mix: x (n, R, LANE); nbrs (n, deg, R, LANE) — neighbor
+    copies pre-gathered per worker; weights (n, deg+1), w[:, 0] = self.
+
+    Grid is (n, R // SUBLANE): one dispatch covers every worker row."""
+    n, R, L = x.shape
+    deg = nbrs.shape[1]
+    assert L == LANE and R % SUBLANE == 0, (n, R, L)
+    return pl.pallas_call(
+        _gossip_mix_batched_kernel,
+        grid=(n, R // SUBLANE),
+        in_specs=[
+            pl.BlockSpec((1, deg + 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, SUBLANE, LANE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, deg, SUBLANE, LANE), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANE, LANE), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, R, L), x.dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), x, nbrs)
+
+
 def _gossip_mix_kernel(w_ref, self_ref, nbrs_ref, out_ref):
     """w: (deg+1,); self/out: (SUBLANE, LANE); nbrs: (deg, SUBLANE, LANE)."""
     deg = nbrs_ref.shape[0]

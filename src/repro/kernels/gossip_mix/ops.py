@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .kernel import LANE, SUBLANE, gossip_mix_2d
+from .kernel import LANE, SUBLANE, gossip_mix_2d, gossip_mix_batched_2d
 
 _TILE = LANE * SUBLANE
 
@@ -33,6 +33,37 @@ def gossip_mix(x, nbrs, weights, *, use_kernel: bool = True, interpret: bool = T
     out = gossip_mix_2d(flat.reshape(R, LANE), nflat.reshape(deg, R, LANE),
                         weights, interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def gossip_mix_batched(x, nbr_idx, weights, *, use_kernel: bool = True,
+                       interpret: bool = True):
+    """Mix ALL workers' copies of one parameter tensor in a single dispatch.
+
+    x: (n, ...) stacked worker copies; nbr_idx: (n, deg) int32 padded
+    neighbor row indices (pad = own row); weights: (n, deg+1) with
+    weights[:, 0] the self weight and 0.0 in padded slots (see
+    ``repro.dsgd.gossip.padded_neighbors``).
+
+    Neighbor tiles are pre-gathered by one XLA gather (x[nbr_idx]); the
+    weighted accumulation then runs as ONE ``pallas_call`` whose grid spans
+    (workers × row tiles) — versus n dispatches (one per worker row, each
+    recompiled per neighbor count) for the per-row path. Trace-safe: no
+    host reads of the weight matrix.
+    """
+    if not use_kernel:
+        return ref.gossip_mix_batched(x, nbr_idx, weights)
+    n = x.shape[0]
+    shape = x.shape
+    flat = x.reshape(n, -1)
+    m = flat.shape[1]
+    pad = (-m) % _TILE
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    R = flat.shape[1] // LANE
+    xr = flat.reshape(n, R, LANE)
+    nbrs = xr[nbr_idx]                       # (n, deg, R, LANE), one gather
+    out = gossip_mix_batched_2d(xr, nbrs, weights, interpret=interpret)
+    return out.reshape(n, -1)[:, :m].reshape(shape)
 
 
 def gossip_mix_tree(params, nbr_params, weights, *, use_kernel: bool = True,

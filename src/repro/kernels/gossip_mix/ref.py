@@ -13,3 +13,18 @@ def gossip_mix(x, nbrs, weights):
     acc = x.astype(jnp.float32) * w[0]
     acc = acc + jnp.tensordot(w[1:], nbrs.astype(jnp.float32), axes=(0, 0))
     return acc.astype(x.dtype)
+
+
+def gossip_mix_batched(x, nbr_idx, weights):
+    """All workers at once: x (n, ...) stacked copies; nbr_idx (n, deg) padded
+    neighbor row indices (pad = own row); weights (n, deg+1) with w[:, 0] the
+    self weight and 0 in padded slots.
+
+    Returns w[i,0]·x[i] + Σ_d w[i,d+1]·x[nbr_idx[i,d]] for every i, in f32.
+    """
+    w = weights.astype(jnp.float32)
+    tail = (1,) * (x.ndim - 1)
+    nbrs = x[nbr_idx].astype(jnp.float32)              # (n, deg) + x.shape[1:]
+    acc = x.astype(jnp.float32) * w[:, 0].reshape((-1,) + tail)
+    acc = acc + jnp.sum(nbrs * w[:, 1:].reshape(nbr_idx.shape + tail), axis=1)
+    return acc.astype(x.dtype)

@@ -1,0 +1,227 @@
+"""Parity tests for the device-resident DSGD evaluation engine (DESIGN §11):
+scan/vmapped training vs the host-loop oracle, the batched gossip_mix path
+vs the per-row oracle, and vmapped vs serial consensus simulation."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_baseline
+from repro.core.consensus import simulate_consensus, simulate_consensus_batched
+from repro.data import (
+    class_balanced_partition,
+    epoch_permutations,
+    make_classification_data,
+)
+from repro.dsgd.gossip import (
+    gossip_sim_tree,
+    gossip_sim_tree_rowloop,
+    padded_neighbors,
+)
+from repro.dsgd.sim import (
+    DSGDSimConfig,
+    accuracy_curve_host,
+    accuracy_curves,
+    accuracy_curves_seeds,
+)
+
+N = 8
+CFG = DSGDSimConfig(epochs=3, batch=16, hidden=32, seed=0)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    X, y = make_classification_data(num_classes=6, dim=24,
+                                    samples_per_class=80, seed=0)
+    Xte, yte = make_classification_data(num_classes=6, dim=24,
+                                        samples_per_class=24, seed=0,
+                                        noise_seed=10_001)
+    parts = class_balanced_partition(y, N, seed=0)
+    return (jnp.asarray(X), jnp.asarray(y), parts,
+            jnp.asarray(Xte), jnp.asarray(yte))
+
+
+@pytest.fixture(scope="module")
+def topologies():
+    return [make_baseline("ring", N), make_baseline("exponential", N),
+            make_baseline("equistatic", N, M=2)]
+
+
+# --- data pipeline ----------------------------------------------------------
+
+def test_epoch_permutations_matches_host_loop_stream(dataset):
+    """Identical batch order given a seed: the helper consumes the numpy
+    stream exactly like the seed benchmark's per-epoch permutation loop."""
+    parts = dataset[2]
+    epochs, batch = 3, 16
+    perm = epoch_permutations(parts, epochs, batch, seed=5)
+    per = min(len(p) for p in parts)
+    iters = per // batch
+    assert perm.shape == (epochs, iters, N, batch)
+    rng = np.random.default_rng(5)
+    for e in range(epochs):
+        orders = [rng.permutation(p)[: iters * batch] for p in parts]
+        for it in range(iters):
+            for w in range(N):
+                np.testing.assert_array_equal(
+                    perm[e, it, w], orders[w][it * batch:(it + 1) * batch])
+
+
+def test_epoch_permutations_indices_stay_in_partition(dataset):
+    parts = dataset[2]
+    perm = epoch_permutations(parts, 2, 16, seed=1)
+    for w in range(N):
+        assert set(perm[:, :, w, :].ravel()) <= set(parts[w].tolist())
+
+
+def test_make_classification_data_matches_per_class_loop():
+    """The vectorized sampler is bit-identical to the seed per-class loop."""
+    X, y = make_classification_data(num_classes=5, dim=12,
+                                    samples_per_class=40, seed=3,
+                                    noise_seed=77, class_sep=2.0)
+    rng = np.random.default_rng(3)
+    means = rng.normal(size=(5, 12)) * 2.0 / np.sqrt(12)
+    rng = np.random.default_rng(77)
+    Xs, ys = [], []
+    for c in range(5):
+        Xs.append(means[c] + rng.normal(size=(40, 12)))
+        ys.append(np.full(40, c, np.int32))
+    Xs = np.concatenate(Xs).astype(np.float32)
+    ys = np.concatenate(ys)
+    p = rng.permutation(len(ys))
+    np.testing.assert_array_equal(X, Xs[p])
+    np.testing.assert_array_equal(y, ys[p])
+
+
+# --- batched gossip_mix -----------------------------------------------------
+
+def test_padded_neighbors_layout(topologies):
+    W = np.asarray(topologies[0].W)  # ring: degree 2 everywhere
+    nbr_idx, weights = padded_neighbors(W)
+    assert nbr_idx.shape == (N, 2) and weights.shape == (N, 3)
+    for i in range(N):
+        assert float(weights[i, 0]) == pytest.approx(W[i, i])
+        assert sorted(np.asarray(nbr_idx[i]).tolist()) == \
+            sorted(np.nonzero(W[i] * (1 - np.eye(N)[i]))[0].tolist())
+
+
+def test_padded_neighbors_pad_is_self_with_zero_weight():
+    # star graph: hub degree n-1, leaves degree 1 → heavy padding
+    W = np.eye(6) * 0.5
+    for j in range(1, 6):
+        W[0, j] = W[j, 0] = 0.1
+    nbr_idx, weights = padded_neighbors(W)
+    assert nbr_idx.shape == (6, 5)
+    for i in range(1, 6):
+        assert np.all(np.asarray(nbr_idx[i, 1:]) == i)       # pad = own row
+        assert np.all(np.asarray(weights[i, 2:]) == 0.0)      # pad weight 0
+
+
+@pytest.mark.parametrize("shape", [(130,), (4, 7), (8, 130)])
+def test_gossip_batched_matches_rowloop(topologies, shape):
+    """Acceptance: batched gossip_mix vs the per-row oracle ≤ 1e-6."""
+    for topo in topologies:
+        W = jnp.asarray(topo.W, jnp.float32)
+        tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (N,) + shape)}
+        batched = gossip_sim_tree(tree, W, use_kernel=True)
+        rowloop = gossip_sim_tree_rowloop(tree, W)
+        np.testing.assert_allclose(np.asarray(batched["a"]),
+                                   np.asarray(rowloop["a"]), atol=1e-6)
+
+
+def test_gossip_batched_matches_dense(topologies):
+    for topo in topologies:
+        W = jnp.asarray(topo.W, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (N, 33, 5))
+        batched = gossip_sim_tree({"p": x}, W, use_kernel=True)["p"]
+        dense = gossip_sim_tree({"p": x}, W)["p"]
+        np.testing.assert_allclose(np.asarray(batched), np.asarray(dense),
+                                   atol=1e-5)
+
+
+def test_gossip_batched_trace_safe_under_jit(topologies):
+    """With precomputed padded indices the batched path jits — the per-row
+    path's host read of W made this impossible."""
+    W = jnp.asarray(topologies[0].W, jnp.float32)
+    nbr = padded_neighbors(W)
+
+    @jax.jit
+    def mix(tree):
+        return gossip_sim_tree(tree, W, use_kernel=True, nbr=nbr)
+
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(2), (N, 50))}
+    np.testing.assert_allclose(np.asarray(mix(tree)["a"]),
+                               np.asarray(gossip_sim_tree(tree, W)["a"]),
+                               atol=1e-5)
+
+
+# --- scan/vmapped training engine ------------------------------------------
+
+def test_scan_engine_matches_host_oracle(dataset, topologies):
+    """Same accuracy curve as the per-iteration host loop (fp32 tolerance),
+    identical batch order by construction."""
+    X, y, parts, Xte, yte = dataset
+    for topo in topologies[:2]:
+        W = jnp.asarray(topo.W, jnp.float32)
+        accs_scan, iters_s = accuracy_curves(W, X, y, parts, Xte, yte, CFG)
+        accs_host, iters_h = accuracy_curve_host(W, X, y, parts, Xte, yte, CFG)
+        assert iters_s == iters_h
+        assert accs_scan.shape == accs_host.shape
+        # accuracy is a discrete mean over the test set: fp32 drift can only
+        # flip borderline samples, so allow at most one of 144
+        assert np.abs(np.asarray(accs_scan) - accs_host).max() <= 1.0 / 144 + 1e-7
+
+
+def test_vmapped_topologies_match_single_runs(dataset, topologies):
+    X, y, parts, Xte, yte = dataset
+    Ws = jnp.stack([jnp.asarray(t.W, jnp.float32) for t in topologies])
+    accs_b, iters = accuracy_curves(Ws, X, y, parts, Xte, yte, CFG)
+    assert accs_b.shape == (len(topologies), CFG.epochs)
+    for k in range(len(topologies)):
+        accs_1, _ = accuracy_curves(Ws[k], X, y, parts, Xte, yte, CFG)
+        np.testing.assert_allclose(np.asarray(accs_b[k]), np.asarray(accs_1),
+                                   atol=1e-6)
+
+
+def test_seed_vmap_matches_per_seed_runs(dataset, topologies):
+    X, y, parts, Xte, yte = dataset
+    Ws = jnp.stack([jnp.asarray(t.W, jnp.float32) for t in topologies[:2]])
+    accs_s, _ = accuracy_curves_seeds(Ws, X, y, parts, Xte, yte, [0, 3], CFG)
+    assert accs_s.shape == (2, 2, CFG.epochs)
+    for si, seed in enumerate([0, 3]):
+        cfg = DSGDSimConfig(epochs=CFG.epochs, batch=CFG.batch,
+                            hidden=CFG.hidden, seed=seed)
+        accs_1, _ = accuracy_curves(Ws, X, y, parts, Xte, yte, cfg)
+        np.testing.assert_allclose(np.asarray(accs_s[si]), np.asarray(accs_1),
+                                   atol=1e-6)
+
+
+def test_training_actually_learns(dataset, topologies):
+    X, y, parts, Xte, yte = dataset
+    W = jnp.asarray(topologies[0].W, jnp.float32)
+    accs, _ = accuracy_curves(W, X, y, parts, Xte, yte, CFG)
+    assert float(accs[-1]) > 0.5
+
+
+# --- vmapped consensus ------------------------------------------------------
+
+def test_consensus_batched_matches_serial(topologies):
+    traces = simulate_consensus_batched(topologies, iters=60, dim=8, seed=2,
+                                        b_mins=[2.0, 1.0, None])
+    for topo, tr in zip(topologies, traces):
+        st = simulate_consensus(topo, iters=60, dim=8, seed=2)
+        np.testing.assert_allclose(tr.errors, st.errors, rtol=1e-12, atol=0)
+        assert tr.topology == st.topology
+    assert traces[0].t_iter_ms == pytest.approx(
+        simulate_consensus(topologies[0], iters=1, b_min=2.0).t_iter_ms)
+
+
+def test_consensus_batched_rejects_mixed_n():
+    topos = [make_baseline("ring", 8), make_baseline("ring", 12)]
+    with pytest.raises(ValueError):
+        simulate_consensus_batched(topos, iters=10)
+
+
+def test_consensus_batched_empty():
+    assert simulate_consensus_batched([], iters=10) == []
