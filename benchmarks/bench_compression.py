@@ -1,102 +1,246 @@
-"""Beyond-paper: CHOCO compressed gossip × BA-Topo.
+"""Beyond-paper: CHOCO compressed gossip × BA-Topo, on the device-resident
+cross-product engine (DESIGN.md §12).
 
 Measures consensus error vs TRANSMITTED BYTES (the quantity the paper's
-bandwidth model turns into time): dense gossip moves d floats per edge per
-iteration; CHOCO with top-k moves ω·d. Reports modeled time to consensus
-1e-3 under Eq. 34 with per-iteration time scaled by ω.
+bandwidth model turns into time) for the scenario's full §VI comparison set
+(9 topologies for homo n=16) × {dense, top-k, random-k} × a γ grid — each
+compressor family is ONE vmapped dispatch over its (topology, γ) cross
+product. Dense gossip moves d floats per edge per iteration; CHOCO moves
+ω·d, so modeled per-iteration time (Eq. 34) scales by ω. The top-k family
+also runs the round-robin DYNAMIC cycles (compressed × time-varying — the
+full cross product: per-step matrix gathered by step index, matching edges
+at full node bandwidth scaled by ω).
+
+``--engine host`` replays the per-iteration host loop (one step dispatch +
+``float()`` sync per iteration, early-stopped at the target — the seed bench
+behaviour) as the parity oracle; ``--engine both`` adds the scan-vs-host
+compare row tracked in BENCH_admm.json.
 
   PYTHONPATH=src python -m benchmarks.bench_compression
+  PYTHONPATH=src python -m benchmarks.bench_compression --engine both --json-out rows.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.bandwidth import PaperConstants, t_iter
-from repro.core.bandwidth import homo_edge_bandwidth, min_edge_bandwidth
-from repro.core.graph import weight_matrix_from_weights
-from repro.dsgd.compression import (
-    choco_gamma,
-    choco_gossip_init,
-    choco_gossip_step,
-    identity_compressor,
-    top_k_compressor,
+from repro.dsgd.compression import choco_gamma
+from repro.dsgd.dynamic import (
+    cycle_weight_matrices,
+    round_robin_schedules,
+    static_cycle,
 )
-from repro.launch.steps import topology_for
+from repro.dsgd.sim import (
+    CommSpec,
+    consensus_curve_host_cross,
+    consensus_curves_cross,
+)
+
+from .common import dynamic_step_times, edge_b_min, scenario_topologies
 
 PC = PaperConstants()
 
+#: The compressor families of the cross product. Dense is the γ=1 reference;
+#: top-10% additionally runs the round-robin dynamic cycles.
+FAMILIES = [
+    (CommSpec(), ("static",)),
+    (CommSpec("top_k", 0.25), ("static",)),
+    (CommSpec("top_k", 0.10), ("static", "round_robin")),
+    (CommSpec("random_k", 0.10), ("static",)),
+]
 
-def run(n: int, r: int, dim: int, iters: int, target: float, seed: int) -> list[dict]:
-    topo = topology_for(n, kind="ba", r=r, seed=seed)
-    W = jnp.asarray(weight_matrix_from_weights(n, topo.edges, topo.g), jnp.float32)
-    lam2 = 1.0 - float(np.sort(np.abs(np.linalg.eigvals(np.asarray(W))))[-2])
-    b_min = min_edge_bandwidth(homo_edge_bandwidth(topo))
-    t_dense_ms = t_iter(b_min, PC)
 
-    x0 = jax.random.normal(jax.random.PRNGKey(seed), (n, dim))
-    target_abs = target * float(jnp.linalg.norm(x0 - x0.mean(0)))
+def gamma_grid(spec: CommSpec, topo, lam2: float) -> list[float]:
+    """Candidate γ per (compressor, topology): the CHOCO theory value plus a
+    line grid — the theory bound γ = δ/(8+δ) is very loose in practice."""
+    if not spec.choco:
+        return [1.0]
+    return [choco_gamma(topo, lam2), 0.2, 0.4, 0.6, 0.8]
 
-    def iters_to(comp, gamma):
-        state = choco_gossip_init(x0)
-        key = jax.random.PRNGKey(seed + 1)
-        for k in range(iters):
-            key, sub = jax.random.split(key)
-            state = choco_gossip_step(state, W, comp, gamma, sub)
-            if float(jnp.linalg.norm(state.x - state.x.mean(0))) <= target_abs:
-                return k + 1
-        return None
 
-    rows = []
-    for comp in (identity_compressor(), top_k_compressor(0.25),
-                 top_k_compressor(0.10)):
-        if comp.ratio == 1.0:
-            best_g, best_it = 1.0, iters_to(comp, 1.0)
-        else:
-            # γ line search: the theory bound γ=δ/(8+δ) is very loose here
-            best_g, best_it = None, None
-            for g in (choco_gamma(topo, lam2), 0.2, 0.4, 0.6, 0.8):
-                it = iters_to(comp, g)
-                if it is not None and (best_it is None or it < best_it):
-                    best_g, best_it = g, it
-        per_iter_ms = t_dense_ms * comp.ratio
-        rows.append({
-            "compressor": comp.name, "ratio": comp.ratio,
-            "gamma": round(best_g, 3) if best_g else None,
-            "iters_to_target": best_it,
-            "bytes_per_edge_iter": round(comp.ratio * dim * 4),
-            "t_consensus_ms": round(best_it * per_iter_ms, 1) if best_it else float("inf"),
-        })
-    return rows
+def build_runs(topos, scenario, node_bw, cs):
+    """One run dict per (topology, mode, compressor, γ), grouped by family."""
+    lam2s, cycles_rr, steps_rr = {}, {}, {}
+    for topo in topos:
+        W = np.asarray(topo.W, dtype=np.float64)
+        lam2s[topo.name] = 1.0 - float(
+            np.sort(np.abs(np.linalg.eigvals(W)))[-2])
+        if not topo.meta.get("directed"):
+            scheds = round_robin_schedules(topo)
+            cycles_rr[topo.name] = np.stack(cycle_weight_matrices(scheds))
+            steps_rr[topo.name] = dynamic_step_times(
+                topo, scheds, scenario, node_bw=node_bw, cs=cs)
+
+    families = []
+    for spec, modes in FAMILIES:
+        runs = []
+        for topo in topos:
+            label = topo.meta.get("label", topo.name)
+            b_min = edge_b_min(topo, scenario, node_bw=node_bw, cs=cs)
+            for mode in modes:
+                if mode == "round_robin" and topo.name not in cycles_rr:
+                    continue
+                if mode == "static":
+                    cycle = static_cycle(topo.W)
+                    step_ms = np.array([t_iter(b_min, PC)])
+                    sends = 2.0 * len(topo.edges) / topo.n   # mean deg
+                else:
+                    cycle = cycles_rr[topo.name]
+                    step_ms = steps_rr[topo.name]
+                    sends = 1.0                              # ≤1 send/node
+                for g in gamma_grid(spec, topo, lam2s[topo.name]):
+                    runs.append({"topology": label, "mode": mode,
+                                 "gamma": float(g), "cycle": cycle,
+                                 "step_ms": step_ms, "sends": sends})
+        families.append((spec, runs))
+    return families
+
+
+def _iters_to(errs: np.ndarray, target: float) -> int | None:
+    hit = np.nonzero(errs / errs[0] <= target)[0]
+    return int(hit[0]) if hit.size else None
+
+
+def run_family(spec, runs, engine, x0, iters, target, seed, dim):
+    """All runs of one compressor family; returns (per-best rows, curves)."""
+    if engine == "scan":
+        errs = consensus_curves_cross([r["cycle"] for r in runs],
+                                      [r["gamma"] for r in runs],
+                                      spec, x0, iters, seed=seed)
+    else:
+        # seed behaviour: serial loops, early-stopped at the target
+        errs = np.full((len(runs), iters + 1), np.nan)
+        for b, r in enumerate(runs):
+            e = consensus_curve_host_cross(r["cycle"], r["gamma"], spec, x0,
+                                           iters, seed=seed, stop_rel=target)
+            errs[b, :len(e)] = e
+    rows = {}
+    for r, e in zip(runs, errs):
+        it = _iters_to(e[~np.isnan(e)], target)
+        key = (r["topology"], r["mode"])
+        if key in rows and not (it is not None
+                                and (rows[key]["iters_to_target"] is None
+                                     or it < rows[key]["iters_to_target"])):
+            continue
+        step_ms = r["step_ms"]
+        # per-step comm cycles over the matchings (same rule as
+        # bench_dynamic), scaled by the transmitted fraction ω
+        t_ms = float(step_ms[np.arange(it) % len(step_ms)].sum()
+                     * spec.ratio) if it is not None else float("inf")
+        rows[key] = {
+            "topology": r["topology"], "mode": r["mode"],
+            "compressor": spec.name, "ratio": spec.ratio, "engine": engine,
+            "gamma": round(r["gamma"], 3), "iters_to_target": it,
+            "bytes_per_edge_iter": round(spec.ratio * dim * 4),
+            "t_consensus_ms": round(t_ms, 1)
+            if np.isfinite(t_ms) else float("inf"),
+            "bytes_to_target_node": round(it * spec.ratio * dim * 4
+                                          * r["sends"])
+            if it is not None else None,
+        }
+    return list(rows.values()), errs
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="homo",
+                    choices=["homo", "node", "intra", "bcube"])
     ap.add_argument("--n", type=int, default=16)
-    ap.add_argument("--r", type=int, default=32)
-    ap.add_argument("--dim", type=int, default=2048)
-    ap.add_argument("--iters", type=int, default=3000)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "float64"],
+                    help="gossip payload dtype (float32 = what DSGD params "
+                         "actually move; the time/bytes model is dtype-free)")
     ap.add_argument("--target", type=float, default=1e-3)
+    ap.add_argument("--sa-iters", type=int, default=600)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "host", "both"],
+                    help="scan = one vmapped dispatch per compressor family; "
+                         "host = per-iteration loop (parity oracle); "
+                         "both = host then scan + a compare row")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
-    print(f"== CHOCO compressed gossip on BA-Topo(n={args.n}, r={args.r}) ==")
-    rows = run(args.n, args.r, args.dim, args.iters, args.target, args.seed)
-    for row in rows:
-        print("  " + json.dumps(row))
-    dense = rows[0]["t_consensus_ms"]
-    best = min(rows, key=lambda r: r["t_consensus_ms"])
-    if best["compressor"] != "dense" and np.isfinite(best["t_consensus_ms"]):
-        print(f"  → {best['compressor']} reaches consensus "
-              f"{dense / best['t_consensus_ms']:.2f}× faster in modeled time")
+
+    print(f"== CHOCO compressed gossip × BA-Topo, scenario={args.scenario} "
+          f"n={args.n} dim={args.dim} (engine={args.engine}) ==")
+    topos, node_bw, cs = scenario_topologies(args.n, args.scenario,
+                                             args.sa_iters, args.seed)
+    families = build_runs(topos, args.scenario, node_bw, cs)
+    n_runs = sum(len(r) for _, r in families)
+    rng = np.random.default_rng(args.seed)
+    x0 = rng.normal(size=(args.n, args.dim)).astype(args.dtype)
+
+    engines = ["host", "scan"] if args.engine == "both" else [args.engine]
+    all_rows: list[dict] = []
+    per_engine: dict[str, dict] = {}
+    hdr = ["topology", "mode", "compressor", "gamma", "iters_to_target",
+           "t_consensus_ms", "bytes_to_target_node"]
+    for engine in engines:
+        t0 = time.time()
+        rows, curves = [], []
+        for spec, runs in families:
+            frows, errs = run_family(spec, runs, engine, x0, args.iters,
+                                     args.target, args.seed, args.dim)
+            rows += frows
+            curves.append(errs)
+        wall = round(time.time() - t0, 3)
+        dense_best = min((r["t_consensus_ms"] for r in rows
+                          if r["compressor"] == "dense"
+                          and np.isfinite(r["t_consensus_ms"])),
+                         default=float("inf"))
+        comp_best = min((r for r in rows if r["compressor"] != "dense"
+                         and np.isfinite(r["t_consensus_ms"])),
+                        key=lambda r: r["t_consensus_ms"], default=None)
+        summary = {"bench": "compression", "scenario": args.scenario,
+                   "n": args.n, "dim": args.dim, "engine": engine,
+                   "runs": n_runs, "iters": args.iters, "total_s": wall,
+                   "best_dense_t_ms": round(dense_best, 1),
+                   "best_compressed_t_ms":
+                       comp_best["t_consensus_ms"] if comp_best else None,
+                   "best_compressed":
+                       f"{comp_best['compressor']}/{comp_best['mode']}"
+                       if comp_best else None}
+        if comp_best:
+            summary["compressed_gain"] = round(
+                dense_best / comp_best["t_consensus_ms"], 2)
+        per_engine[engine] = {"rows": rows, "curves": curves,
+                              "summary": summary}
+        all_rows += rows + [summary]
+        print(f"  -- engine={engine}: {wall}s, {n_runs} runs --")
+        print(" | ".join(f"{h:>20}" for h in hdr))
+        for row in sorted(rows, key=lambda r: (r["topology"], r["mode"],
+                                               r["compressor"])):
+            print(" | ".join(f"{str(row.get(h)):>20}" for h in hdr))
+
+    if args.engine == "both":
+        h, s = per_engine["host"], per_engine["scan"]
+        drift = 0.0
+        for eh, es in zip(h["curves"], s["curves"]):
+            e0 = eh[:, :1]
+            # host stops early at the target; γ-divergent runs (rel error
+            # blowing past 1e2) amplify op-fusion ULPs chaotically and carry
+            # no information — parity is judged on the stable prefix
+            m = ~np.isnan(eh) & (eh <= 1e2 * e0)
+            drift = max(drift, float(np.max(
+                np.abs(np.where(m, eh, 0.0) - np.where(m, es, 0.0))
+                / e0)))
+        crow = {"bench": "compression", "scenario": args.scenario,
+                "n": args.n, "engine": "scan-vs-host",
+                "speedup": round(h["summary"]["total_s"]
+                                 / max(s["summary"]["total_s"], 1e-9), 2),
+                "max_rel_curve_drift": float(f"{drift:.3g}")}
+        all_rows.append(crow)
+        print("  " + json.dumps(crow))
+
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(all_rows, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,96 +1,287 @@
-"""Beyond-paper: time-varying (round-robin matching) gossip vs static BA-Topo.
+"""Beyond-paper: time-varying (round-robin matching) gossip vs static, on the
+device-resident cross-product engine (DESIGN.md §12).
 
-Evaluates, under the paper's own bandwidth model (§VI):
-  static:       every step applies full W — per-node sends = deg(i),
-                per-edge bandwidth b/deg (homogeneous sharing rule),
-                consensus factor r_asym(W) per step;
-  round-robin:  one matching per step — ≤1 send/node, per-edge bandwidth = b
-                (node's full bandwidth), contraction ρ(ΠW_c)^(1/R) per step.
+For every topology of the scenario's §VI comparison set (paper baselines +
+BA-Topo budgets — 9 topologies for homo n=16), two runs enter ONE vmapped
+dispatch: the static topology (length-1 cycle, full W every step) and its
+round-robin matching decomposition (cycle tensor, one matching per step).
+Under the paper's Eq. 34 time model:
 
-Reports modeled time to consensus 1e-4 for both. The paper's §VII names
-dynamic topologies as future work; this is the natural TPU-native variant
-(each matching is ONE collective-permute).
+  static:       per-node sends = deg(i), per-edge bandwidth b/deg
+                (degree-sharing rule), consensus factor r_asym(W) per step;
+  round-robin:  ≤1 send/node — a matching edge gets the FULL node bandwidth
+                min(b_i, b_j) (constraint scenarios re-divide the medium
+                among the matching's edges), contraction ρ(ΠW_c)^(1/R).
+
+Sections: consensus (modeled time to 1e-4) and DSGD time-to-accuracy
+(``--train-epochs``, the Table-II protocol with the per-step comm time
+cycling over the matchings). ``--engine host`` runs the per-iteration host
+loops (parity oracles); ``--engine both`` adds a scan-vs-host compare row —
+the tracked perf row of BENCH_admm.json.
 
   PYTHONPATH=src python -m benchmarks.bench_dynamic
+  PYTHONPATH=src python -m benchmarks.bench_dynamic --engine both --json-out rows.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core.bandwidth import PaperConstants, t_iter
-from repro.dsgd.dynamic import cycle_contraction, cycle_weight_matrices, round_robin_schedules
-from repro.launch.steps import topology_for
+from repro.data import class_balanced_partition, make_classification_data
+from repro.dsgd.dynamic import (
+    cycle_contraction,
+    cycle_weight_matrices,
+    round_robin_schedules,
+    static_cycle,
+)
+from repro.dsgd.sim import (
+    CommSpec,
+    DSGDSimConfig,
+    accuracy_curve_host_cross,
+    consensus_curve_host_cross,
+    consensus_curves_cross,
+    train_curves_cross,
+)
+
+from .common import dynamic_step_times, edge_b_min, scenario_topologies
 
 PC = PaperConstants()
+DENSE = CommSpec()
 
 
-def simulate(Ws: list[np.ndarray], iters: int, seed: int = 0) -> np.ndarray:
-    n = Ws[0].shape[0]
+def build_runs(topos, scenario, node_bw, cs):
+    """One run dict per (topology, mode): cycle tensor + per-step comm times.
+
+    Directed baselines (the exponential graph's W override) have no symmetric
+    matching decomposition — they appear in static mode only.
+    """
+    runs = []
+    for topo in topos:
+        label = topo.meta.get("label", topo.name)
+        b_min = edge_b_min(topo, scenario, node_bw=node_bw, cs=cs)
+        runs.append({
+            "topology": label, "mode": "static",
+            "cycle": static_cycle(topo.W), "rounds": 1,
+            "step_ms": np.array([t_iter(b_min, PC)]),
+            "contraction_per_step": float(topo.r_asym()),
+        })
+        if topo.meta.get("directed"):
+            continue
+        scheds = round_robin_schedules(topo)
+        rho_cycle = cycle_contraction(scheds)
+        runs.append({
+            "topology": label, "mode": "round_robin",
+            "cycle": np.stack(cycle_weight_matrices(scheds)),
+            "rounds": len(scheds),
+            "step_ms": dynamic_step_times(topo, scheds, scenario,
+                                          node_bw=node_bw, cs=cs),
+            "contraction_per_step": rho_cycle ** (1.0 / len(scheds)),
+        })
+    return runs
+
+
+def _t_to(errs: np.ndarray, step_ms: np.ndarray, target: float) -> float:
+    """Modeled ms until the relative consensus error reaches the target;
+    per-step cost cycles over the matching times."""
+    rel = errs / errs[0]
+    hit = np.nonzero(rel <= target)[0]
+    if not hit.size:
+        return float("inf")
+    k = int(hit[0])                               # error after k steps
+    if k == 0:
+        return 0.0
+    return float(step_ms[np.arange(k) % len(step_ms)].sum())
+
+
+def consensus_section(runs, engine, n, iters, target, seed, prof):
+    """Consensus curves for all runs; fills t_consensus_ms per run."""
     rng = np.random.default_rng(seed)
-    x = rng.normal(size=(n, 16))
-    errs = [np.linalg.norm(x - x.mean(0))]
-    for k in range(iters):
-        x = Ws[k % len(Ws)] @ x
-        errs.append(np.linalg.norm(x - x.mean(0)))
-    return np.asarray(errs)
+    x0 = rng.normal(size=(n, 16))
+    t0 = time.time()
+    if engine == "scan":
+        errs = consensus_curves_cross([r["cycle"] for r in runs],
+                                      np.ones(len(runs)), DENSE, x0, iters,
+                                      seed=seed)
+    else:
+        errs = np.stack([consensus_curve_host_cross(r["cycle"], 1.0, DENSE,
+                                                    x0, iters, seed=seed)
+                         for r in runs])
+    prof["consensus_s"] = round(time.time() - t0, 3)
+    out = []
+    for r, e in zip(runs, errs):
+        row = {"topology": r["topology"], "mode": r["mode"],
+               "rounds": r["rounds"], "engine": engine,
+               "contraction_per_step": round(r["contraction_per_step"], 4),
+               "per_step_ms": round(float(np.mean(r["step_ms"])), 3),
+               "t_consensus_ms": round(_t_to(e, r["step_ms"], target), 1)}
+        out.append(row)
+    return out, errs
 
 
-def run(n: int, r: int, seed: int) -> dict:
-    topo = topology_for(n, kind="ba", r=r, seed=seed)
-    from repro.core.graph import weight_matrix_from_weights
-    from repro.core.bandwidth import homo_edge_bandwidth, min_edge_bandwidth
+def training_section(runs, engine, data, epochs, target_acc, seed, prof):
+    """DSGD time-to-accuracy (Table-II protocol) for all runs."""
+    X, y, parts, Xte, yte = data
+    cfg = DSGDSimConfig(epochs=epochs, batch=32, lr=0.05, momentum=0.9,
+                        seed=seed)
+    t0 = time.time()
+    if engine == "scan":
+        accs, iters = train_curves_cross([r["cycle"] for r in runs],
+                                         np.ones(len(runs)), DENSE,
+                                         X, y, parts, Xte, yte, cfg)
+        accs = np.asarray(accs)
+    else:
+        curves = [accuracy_curve_host_cross(r["cycle"], 1.0, DENSE,
+                                            X, y, parts, Xte, yte, cfg)
+                  for r in runs]
+        accs = np.stack([c[0] for c in curves])
+        iters = curves[0][1]
+    prof["train_s"] = round(time.time() - t0, 3)
 
-    W = weight_matrix_from_weights(n, topo.edges, topo.g)
-    scheds = round_robin_schedules(topo)
-    R = len(scheds)
+    out = []
+    for r, a in zip(runs, accs):
+        # per-step comm cycles over the matchings; compute is per iteration
+        steps = epochs * iters
+        per_step = r["step_ms"][np.arange(steps) % len(r["step_ms"])] \
+            + PC.t_comp_ms
+        cum = np.cumsum(per_step)
+        hit = np.nonzero(a >= target_acc)[0]
+        t_target = float(cum[(hit[0] + 1) * iters - 1] / 1e3) \
+            if hit.size else float("inf")
+        out.append({"topology": r["topology"], "mode": r["mode"],
+                    "engine": engine, "final_acc": round(float(a[-1]), 4),
+                    "epoch_ms": round(float(per_step[:iters].sum()), 1),
+                    "t_target_s": round(t_target, 2)
+                    if np.isfinite(t_target) else float("inf")})
+    return out, accs
 
-    # static: b_min under degree sharing
-    b_min_static = min_edge_bandwidth(homo_edge_bandwidth(topo))
-    t_static = t_iter(b_min_static, PC)
-    # round-robin: each node talks to ≤1 peer per step → full bandwidth
-    t_rr = t_iter(PC.b_avail, PC)
 
-    errs_static = simulate([W], 400)
-    errs_rr = simulate(cycle_weight_matrices(scheds), 400 * R)
-
-    def t_to(errs, per_ms):
-        rel = errs / errs[0]
-        hit = np.nonzero(rel <= 1e-4)[0]
-        return float(hit[0] * per_ms) if hit.size else float("inf")
-
-    rho_static = float(np.max(np.abs(np.linalg.eigvals(W - np.ones((n, n)) / n))))
-    return {
-        "n": n, "r": len(topo.edges), "rounds": R,
-        "r_asym_static": round(rho_static, 4),
-        "cycle_contraction": round(cycle_contraction(scheds), 4),
-        "per_step_ms": {"static": round(t_static, 2), "round_robin": round(t_rr, 2)},
-        "t_consensus_ms": {"static": round(t_to(errs_static, t_static), 1),
-                           "round_robin": round(t_to(errs_rr, t_rr), 1)},
-    }
+def _best(rows, mode, key):
+    vals = [r[key] for r in rows if r["mode"] == mode and np.isfinite(r[key])]
+    return round(min(vals), 3) if vals else None
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="homo",
+                    choices=["homo", "node", "intra", "bcube"])
     ap.add_argument("--n", type=int, default=16)
-    ap.add_argument("--r", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=250,
+                    help="consensus iteration budget per static step; the "
+                         "shared budget is iters × max cycle length")
+    ap.add_argument("--target", type=float, default=1e-4)
+    ap.add_argument("--train-epochs", type=int, default=6,
+                    help="DSGD time-to-accuracy epochs (0 disables)")
+    ap.add_argument("--target-acc", type=float, default=0.8)
+    ap.add_argument("--sa-iters", type=int, default=600)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "host", "both"],
+                    help="scan = one vmapped device dispatch per section; "
+                         "host = per-iteration loops (parity oracle); "
+                         "both = host then scan + a compare row")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
-    rows = []
-    for n in (args.n,) if args.n else (8, 16, 32):
-        row = run(n, args.r, args.seed)
-        rows.append(row)
-        print(json.dumps(row))
-        ts = row["t_consensus_ms"]
-        if np.isfinite(ts["round_robin"]) and ts["round_robin"] < ts["static"]:
-            print(f"  → round-robin reaches consensus "
-                  f"{ts['static'] / ts['round_robin']:.2f}× faster under Eq. 34")
+
+    print(f"== dynamic round-robin vs static gossip, scenario={args.scenario} "
+          f"n={args.n} (engine={args.engine}) ==")
+    t0 = time.time()
+    topos, node_bw, cs = scenario_topologies(args.n, args.scenario,
+                                             args.sa_iters, args.seed)
+    runs = build_runs(topos, args.scenario, node_bw, cs)
+    topo_s = round(time.time() - t0, 3)
+    iters = args.iters * max(r["rounds"] for r in runs)
+
+    data = None
+    if args.train_epochs > 0:
+        X, y = make_classification_data(num_classes=10, dim=64,
+                                        samples_per_class=400, seed=args.seed)
+        Xte, yte = make_classification_data(num_classes=10, dim=64,
+                                            samples_per_class=64,
+                                            seed=args.seed,
+                                            noise_seed=args.seed + 10_001)
+        parts = class_balanced_partition(y, args.n, seed=args.seed)
+        data = (jnp.asarray(X), jnp.asarray(y), parts,
+                jnp.asarray(Xte), jnp.asarray(yte))
+
+    engines = ["host", "scan"] if args.engine == "both" else [args.engine]
+    all_rows: list[dict] = []
+    per_engine: dict[str, dict] = {}
+    for engine in engines:
+        prof = {"topo_s": topo_s, "train_s": 0.0}
+        crows, errs = consensus_section(runs, engine, args.n, iters,
+                                        args.target, args.seed, prof)
+        trows, taccs = ([], None)
+        if data is not None:
+            trows, taccs = training_section(runs, engine, data,
+                                            args.train_epochs,
+                                            args.target_acc, args.seed, prof)
+        by_key = {(t["topology"], t["mode"]): t for t in trows}
+        for row in crows:
+            row.update({k: v for k, v in
+                        by_key.get((row["topology"], row["mode"]), {}).items()
+                        if k in ("final_acc", "epoch_ms", "t_target_s")})
+        summary = {
+            "bench": "dynamic", "scenario": args.scenario, "n": args.n,
+            "engine": engine, "runs": len(runs), "iters": iters,
+            "train_epochs": args.train_epochs,
+            "consensus_s": prof["consensus_s"], "train_s": prof["train_s"],
+            "total_s": round(prof["consensus_s"] + prof["train_s"], 3),
+            "best_static_t_consensus_ms": _best(crows, "static",
+                                                "t_consensus_ms"),
+            "best_rr_t_consensus_ms": _best(crows, "round_robin",
+                                            "t_consensus_ms"),
+        }
+        if summary["best_rr_t_consensus_ms"] \
+                and summary["best_static_t_consensus_ms"]:
+            summary["rr_consensus_gain"] = round(
+                summary["best_static_t_consensus_ms"]
+                / summary["best_rr_t_consensus_ms"], 2)
+        if trows:
+            summary["best_static_t_target_s"] = _best(trows, "static",
+                                                      "t_target_s")
+            summary["best_rr_t_target_s"] = _best(trows, "round_robin",
+                                                  "t_target_s")
+        per_engine[engine] = {"rows": crows, "errs": errs, "accs": taccs,
+                              "summary": summary}
+        all_rows += crows + [summary]
+        hdr = ["topology", "mode", "rounds", "contraction_per_step",
+               "per_step_ms", "t_consensus_ms"] \
+            + (["final_acc", "t_target_s"] if trows else [])
+        print(f"  -- engine={engine}: consensus {prof['consensus_s']}s, "
+              f"train {prof['train_s']}s --")
+        print(" | ".join(f"{h:>20}" for h in hdr))
+        for row in crows:
+            print(" | ".join(f"{str(row.get(h)):>20}" for h in hdr))
+
+    if args.engine == "both":
+        h, s = per_engine["host"], per_engine["scan"]
+        e0 = h["errs"][:, :1]
+        drift = float(np.max(np.abs(h["errs"] - s["errs"]) / e0))
+        crow = {"bench": "dynamic", "scenario": args.scenario, "n": args.n,
+                "engine": "scan-vs-host",
+                "speedup": round(h["summary"]["total_s"]
+                                 / max(s["summary"]["total_s"], 1e-9), 2),
+                "consensus_speedup": round(
+                    h["summary"]["consensus_s"]
+                    / max(s["summary"]["consensus_s"], 1e-9), 2),
+                "max_rel_curve_drift": float(f"{drift:.3g}")}
+        if h["accs"] is not None:
+            crow["train_speedup"] = round(
+                h["summary"]["train_s"] / max(s["summary"]["train_s"], 1e-9), 2)
+            crow["max_final_acc_drift"] = round(
+                float(np.max(np.abs(h["accs"][:, -1] - s["accs"][:, -1]))), 6)
+        all_rows.append(crow)
+        print("  " + json.dumps(crow))
+
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(all_rows, f, indent=1)
 
 
 if __name__ == "__main__":

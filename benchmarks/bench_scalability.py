@@ -179,7 +179,7 @@ def main(argv=None) -> None:
 
     if args.scenarios:
         print(f"== constraint scenarios at n={args.scenario_nodes} "
-              f"(scan driver, fast solver stack) ==")
+              "(scan driver, fast solver stack) ==")
         rows += run_scenarios([s for s in args.scenarios.split(",") if s],
                               args.scenario_nodes, args.admm_iters, args.seed)
 

@@ -34,27 +34,17 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import intra_server_constraints, bcube_constraints
 from repro.core.bandwidth import PaperConstants, t_epoch
 from repro.data import class_balanced_partition, make_classification_data
 from repro.dsgd.sim import DSGDSimConfig, accuracy_curve_host, accuracy_curves
 
-from .common import NODE_BW_16, ba_topo, edge_b_min, paper_baselines
+from .common import edge_b_min, scenario_topologies
 
 PC = PaperConstants()
 
 
 def build_setup(scenario: str, n: int, sa_iters: int, seed: int, prof: dict):
     """Data + topology set shared by every engine; phases recorded in prof."""
-    cs = None
-    node_bw = None
-    if scenario == "node":
-        node_bw = NODE_BW_16[:n]
-    elif scenario == "intra":
-        cs = intra_server_constraints(n)
-    elif scenario == "bcube":
-        cs = bcube_constraints(p=int(round(np.sqrt(n))), k=2)
-
     t0 = time.time()
     X, y = make_classification_data(num_classes=10, dim=64,
                                     samples_per_class=400, seed=seed)
@@ -67,17 +57,7 @@ def build_setup(scenario: str, n: int, sa_iters: int, seed: int, prof: dict):
     prof["data_s"] = round(time.time() - t0, 3)
 
     t0 = time.time()
-    topos = paper_baselines(n, scenario)
-    budgets = {"homo": (16, 24, 32), "node": (16, 32, 48),
-               "intra": (8, 12, 16), "bcube": (24, 48)}[scenario]
-    for r in budgets:
-        try:
-            t = ba_topo(n, r, scenario, node_bw=node_bw, cs=cs, seed=seed,
-                        sa_iters=sa_iters)
-            t.meta["label"] = f"ba-topo(r={len(t.edges)})"
-            topos.append(t)
-        except ValueError as e:
-            print(f"  [warn] ba-topo r={r}: {e}")
+    topos, node_bw, cs = scenario_topologies(n, scenario, sa_iters, seed)
     prof["topo_s"] = round(time.time() - t0, 3)
     return data, topos, node_bw, cs
 
@@ -202,7 +182,7 @@ def main(argv=None) -> None:
     n = args.n or (8 if args.scenario == "intra" else 16)
 
     print(f"== DSGD time-to-accuracy, scenario={args.scenario}, n={n} "
-          f"(paper Table II) ==")
+          "(paper Table II) ==")
     prof_setup: dict = {}
     setup = build_setup(args.scenario, n, args.sa_iters, args.seed, prof_setup)
     engines = ["host", "scan"] if args.engine == "both" else [args.engine]

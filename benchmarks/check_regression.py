@@ -1,0 +1,140 @@
+"""Perf-regression gate: fresh `run.py --json` rows vs the committed baseline.
+
+BENCH_admm.json is the perf-trajectory file committed across PRs; CI used to
+upload fresh rows as artifacts without ever checking them. This gate loads
+both files, matches rows by their identity fields (bench/n/solver/driver/
+engine/…), and fails when a tracked metric regresses beyond its tolerance
+band:
+
+  - absolute timings (ms_per_iter, solve_s, total_s, …) may drift a lot
+    between machines (the baseline was measured on the committing dev's box,
+    CI runners vary ~2-3×), so they get a WIDE band: fresh ≤ base × tol-time.
+  - speedup ratios (scan vs seed, device vs host, scan vs host) are
+    machine-relative and therefore the real gate: fresh ≥ base / tol-ratio.
+  - parity drifts (r_asym_drift, max_final_acc_drift, max_rel_curve_drift)
+    must stay inside max(base × tol-ratio, floor) — an engine that silently
+    diverges from its oracle fails even if it got faster.
+  - boolean parity flags (ranking_match) must not flip to False.
+
+Baseline rows with no fresh counterpart fail the gate (a tracked benchmark
+silently dropped is itself a regression); fresh rows with no baseline are
+reported but pass (new benchmarks land before their first committed rows).
+
+  PYTHONPATH=src python -m benchmarks.run --json fresh.json
+  PYTHONPATH=src python -m benchmarks.check_regression --fresh fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: Fields that identify a row (subset present varies by bench).
+ID_FIELDS = ("bench", "n", "r", "solver", "driver", "timing", "scenario",
+             "engine", "pipeline", "psd_backend", "dtype", "precond",
+             "cg_inexact", "restarts", "epochs", "train_epochs", "dim",
+             "runs", "iters", "topologies", "compressor", "mode")
+
+#: Metric → direction. "time" = lower is better, wide band (machine speed);
+#: "ratio" = higher is better, tight band (machine-relative speedups);
+#: "drift" = lower is better, tight band with an absolute floor.
+METRICS = {
+    "ms_per_iter": "time", "solve_s": "time", "pr1_ms_per_iter": "time",
+    "exact_ms_per_iter": "time", "total_s": "time", "train_s": "time",
+    "consensus_s": "time", "data_s": "time", "topo_s": "time",
+    "warm_s": "time", "admm_s": "time", "polish_s": "time", "eval_s": "time",
+    "round_s": "time",
+    "scan_speedup_vs_seed": "ratio", "speedup_vs_pr1": "ratio",
+    "speedup_vs_exact": "ratio", "speedup": "ratio", "warm_speedup": "ratio",
+    "train_speedup": "ratio", "total_speedup": "ratio",
+    "consensus_speedup": "ratio",
+    "r_asym_drift": "drift", "max_final_acc_drift": "drift",
+    "max_rel_curve_drift": "drift",
+}
+
+#: Absolute floors below which drift comparisons are noise (the curve floor
+#: covers f32-payload fusion noise over hundreds of gossip iterations; real
+#: engine/oracle divergence shows up orders of magnitude above it).
+DRIFT_FLOORS = {"r_asym_drift": 5e-3, "max_final_acc_drift": 0.02,
+                "max_rel_curve_drift": 1e-4}
+
+BOOL_FLAGS = ("ranking_match",)
+
+
+def row_key(row: dict) -> tuple:
+    return tuple((k, row[k]) for k in ID_FIELDS if k in row)
+
+
+def check_row(base: dict, fresh: dict, tol_time: float,
+              tol_ratio: float) -> list[str]:
+    problems = []
+    for metric, kind in METRICS.items():
+        if metric not in base or metric not in fresh:
+            continue
+        b, f = base[metric], fresh[metric]
+        if b is None or f is None:
+            continue
+        if kind == "time" and f > b * tol_time:
+            problems.append(f"{metric}: {f} > baseline {b} × {tol_time}")
+        elif kind == "ratio" and f < b / tol_ratio:
+            problems.append(f"{metric}: {f} < baseline {b} / {tol_ratio}")
+        elif kind == "drift":
+            limit = max(b * tol_ratio, DRIFT_FLOORS.get(metric, 0.0))
+            if f > limit:
+                problems.append(f"{metric}: {f} > max(baseline {b} × "
+                                f"{tol_ratio}, floor {DRIFT_FLOORS.get(metric)})")
+    for flag in BOOL_FLAGS:
+        if base.get(flag) is True and fresh.get(flag) is False:
+            problems.append(f"{flag}: flipped True → False")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True,
+                    help="rows from a fresh `benchmarks.run --json` run")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         "BENCH_admm.json"),
+                    help="committed baseline (default: repo BENCH_admm.json)")
+    ap.add_argument("--tol-time", type=float, default=5.0,
+                    help="absolute-timing band: fresh ≤ base × tol "
+                         "(wide — CI runners vary)")
+    ap.add_argument("--tol-ratio", type=float, default=2.0,
+                    help="speedup/drift band: speedups ≥ base / tol, "
+                         "drifts ≤ base × tol (machine-relative)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    fresh_by_key = {row_key(r): r for r in fresh}
+    failures, checked = [], 0
+    for brow in baseline:
+        key = row_key(brow)
+        frow = fresh_by_key.get(key)
+        label = ", ".join(f"{k}={v}" for k, v in key)
+        if frow is None:
+            failures.append(f"[{label}] tracked row MISSING from fresh run")
+            continue
+        checked += 1
+        for p in check_row(brow, frow, args.tol_time, args.tol_ratio):
+            failures.append(f"[{label}] {p}")
+    base_keys = {row_key(r) for r in baseline}
+    new = [row_key(r) for r in fresh if row_key(r) not in base_keys]
+    for key in new:
+        print("  new (unbaselined) row: "
+              + ", ".join(f"{k}={v}" for k, v in key))
+
+    print(f"check_regression: {checked}/{len(baseline)} baseline rows "
+          f"matched, {len(new)} new rows, {len(failures)} failure(s)")
+    for fail in failures:
+        print("  FAIL " + fail)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

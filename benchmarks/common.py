@@ -15,6 +15,7 @@ from repro.core.bandwidth import (
     homo_edge_bandwidth,
     min_edge_bandwidth,
     node_hetero_edge_bandwidth,
+    t_iter,
 )
 from repro.core.graph import Topology
 
@@ -41,19 +42,25 @@ def paper_baselines(n: int, scenario: str) -> list[Topology]:
     return out
 
 
+def constraint_edge_bandwidths(n: int, edges, cs) -> np.ndarray:
+    """Per-edge bandwidths of a selected edge set under a shared-medium
+    ConstraintSet — the medium is divided among the SELECTED edges only, so
+    the same helper serves the full static set and a single matching."""
+    from repro.core.graph import all_edges, edge_index
+    eidx = edge_index(n)
+    sel = np.zeros(len(all_edges(n)), dtype=bool)
+    for e in edges:
+        sel[eidx[tuple(sorted(e))]] = True
+    return np.asarray(cs.edge_bandwidth(sel))[sel]
+
+
 def edge_b_min(topo: Topology, scenario: str, node_bw: np.ndarray | None = None,
                cs=None) -> float:
     """Minimum per-edge bandwidth under the scenario's sharing rule."""
     if scenario == "node":
         bw = node_hetero_edge_bandwidth(topo, node_bw)
     elif scenario in ("intra", "bcube") and cs is not None:
-        from repro.core.graph import all_edges, edge_index
-        eidx = edge_index(topo.n)
-        sel = np.zeros(len(all_edges(topo.n)), dtype=bool)
-        for e in topo.edges:
-            sel[eidx[tuple(sorted(e))]] = True
-        full = np.asarray(cs.edge_bandwidth(sel))
-        bw = full[sel]
+        bw = constraint_edge_bandwidths(topo.n, topo.edges, cs)
     else:
         bw = homo_edge_bandwidth(topo)
     return min_edge_bandwidth(np.asarray(bw))
@@ -67,3 +74,66 @@ def ba_topo(n: int, r: int, scenario: str = "homo", *, node_bw=None, cs=None,
     if scenario == "node":
         return optimize_topology(n, r, "node", node_bandwidths=node_bw, cfg=cfg)
     return optimize_topology(n, r, "constraint", cs=cs, cfg=cfg)
+
+
+#: §VI-B edge-budget grids per scenario (bench_training_time's Table II sets).
+SCENARIO_BUDGETS = {"homo": (16, 24, 32), "node": (16, 32, 48),
+                    "intra": (8, 12, 16), "bcube": (24, 48)}
+
+
+def scenario_inputs(scenario: str, n: int):
+    """(node_bw, cs) for a scenario — the hetero inputs of §VI-A2/A3."""
+    node_bw = NODE_BW_16[:n] if scenario == "node" else None
+    cs = None
+    if scenario == "intra":
+        cs = intra_server_constraints(n)
+    elif scenario == "bcube":
+        cs = bcube_constraints(p=int(round(np.sqrt(n))), k=2)
+    return node_bw, cs
+
+
+def scenario_topologies(n: int, scenario: str, sa_iters: int, seed: int):
+    """The full §VI comparison set for a scenario: paper baselines + BA-Topo
+    at the scenario's edge budgets (9 topologies for homo n=16 — the ISSUE-5
+    tracked point). Returns (topos, node_bw, cs)."""
+    node_bw, cs = scenario_inputs(scenario, n)
+    topos = paper_baselines(n, scenario)
+    for r in SCENARIO_BUDGETS[scenario]:
+        try:
+            t = ba_topo(n, r, scenario, node_bw=node_bw, cs=cs, seed=seed,
+                        sa_iters=sa_iters)
+            t.meta["label"] = f"ba-topo(r={len(t.edges)})"
+            topos.append(t)
+        except ValueError as e:
+            print(f"  [warn] ba-topo r={r}: {e}")
+    return topos, node_bw, cs
+
+
+def dynamic_step_times(topo: Topology, schedules, scenario: str,
+                       node_bw: np.ndarray | None = None, cs=None,
+                       const: PaperConstants = PC) -> np.ndarray:
+    """Per-matching modeled comm times (ms) of a round-robin cycle (Eq. 34).
+
+    In round c only the matching's edges are active, so every node talks to
+    ≤1 peer and an edge gets the FULL node bandwidth — min(b_i, b_j) instead
+    of the degree-shared min(b_i/d_i, b_j/d_j) (homo/node scenarios). For
+    shared-medium constraint scenarios the medium is re-divided among the
+    matching's edges only (``cs.edge_bandwidth`` on the matching selection).
+    Returns (R,) ms — step t of the cycle costs ``times[t % R]``.
+    """
+    n = topo.n
+    times = np.empty(len(schedules))
+    for c, sched in enumerate(schedules):
+        edges = [(s, d) for perm in sched.perms for (s, d) in perm if s < d]
+        if not edges:
+            times[c] = 0.0
+            continue
+        if scenario == "node":
+            b = np.asarray(node_bw, dtype=np.float64)
+            b_min = min(min(b[i], b[j]) for i, j in edges)
+        elif scenario in ("intra", "bcube") and cs is not None:
+            b_min = float(constraint_edge_bandwidths(n, edges, cs).min())
+        else:
+            b_min = const.b_avail
+        times[c] = t_iter(b_min, const)
+    return times

@@ -41,15 +41,18 @@ def main(argv=None) -> None:
         import json as _json
         import tempfile
 
-        from . import bench_admm, bench_pipeline, bench_training_time
+        from . import (bench_admm, bench_compression, bench_dynamic,
+                       bench_pipeline, bench_training_time)
         # Fixed, quick configuration so rows stay comparable across PRs:
         # backend×driver grid at n=16/32 + the fast-compare row at n=64,
         # the end-to-end outer-pipeline rows (device vs host phase
         # breakdown at the ISSUE-3 acceptance point: n=64, 4 restarts),
-        # and the DSGD training-engine compare at the ISSUE-4 acceptance
-        # point (homo, n=16, default epochs; host oracle vs scan engine —
-        # only the engine-level summary/compare rows are tracked, the
-        # per-topology accuracy rows stay in the artifacts).
+        # the DSGD training-engine compare at the ISSUE-4 acceptance
+        # point (homo, n=16, default epochs; host oracle vs scan engine),
+        # and the ISSUE-5 cross-product engines (dynamic round-robin and
+        # CHOCO compression at the homo n=16 / 9-topology tracked point,
+        # scan vs host-loop compare rows). Only engine-level summary and
+        # compare rows are tracked; per-topology rows stay in artifacts.
         with tempfile.TemporaryDirectory() as td:
             bench_admm.main(["--nodes", "16,32", "--iters", "60",
                              "--fast-nodes", "64",
@@ -58,13 +61,22 @@ def main(argv=None) -> None:
                                  "--json-out", f"{td}/pipeline.json"])
             bench_training_time.main(["--scenario", "homo", "--engine", "both",
                                       "--json-out", f"{td}/training.json"])
+            bench_dynamic.main(["--engine", "both",
+                                "--json-out", f"{td}/dynamic.json"])
+            bench_compression.main(["--engine", "both",
+                                    "--json-out", f"{td}/compression.json"])
             rows = (_json.load(open(f"{td}/admm.json"))
                     + _json.load(open(f"{td}/pipeline.json"))
                     + [r for r in _json.load(open(f"{td}/training.json"))
-                       if r.get("bench") == "training"])
+                       if r.get("bench") == "training"]
+                    + [r for r in _json.load(open(f"{td}/dynamic.json"))
+                       if r.get("bench") == "dynamic"]
+                    + [r for r in _json.load(open(f"{td}/compression.json"))
+                       if r.get("bench") == "compression"])
         with open(args.json, "w") as f:
             _json.dump(rows, f, indent=1)
-        print(f"tracked ADMM + pipeline + training perf rows written to {args.json}")
+        print("tracked ADMM + pipeline + training + dynamic + compression "
+              f"perf rows written to {args.json}")
         return
 
     from . import (bench_admm, bench_compression, bench_consensus,

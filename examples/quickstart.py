@@ -21,7 +21,7 @@ N, R = 16, 32
 print(f"=== 1. BA-Topo for n={N}, edge budget r={R} (paper Eq. 9) ===")
 topo = optimize_topology(N, R, "homo", cfg=BATopoConfig(sa_iters=800))
 print(f"  edges={len(topo.edges)}  r_asym={topo.r_asym():.4f} "
-      f"(paper Table I @ n=16: 0.52)")
+      "(paper Table I @ n=16: 0.52)")
 print(f"  selected_from={topo.meta.get('selected_from')}")
 
 print("\n=== 2. consensus speed vs baselines (paper Fig. 1) ===")

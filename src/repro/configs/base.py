@@ -4,7 +4,7 @@ lives in ``repro/configs/<id>.py`` with the exact figures from the assignment
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 __all__ = ["ModelConfig", "reduced_for_smoke", "INPUT_SHAPES", "InputShape"]
 

@@ -14,7 +14,7 @@ import math
 
 import numpy as np
 
-from .graph import Topology, all_edges, r_asym, weight_matrix_from_weights
+from .graph import Topology, all_edges, r_asym
 from .weights import metropolis_weights, uniform_neighbor_weights
 
 __all__ = [

@@ -20,7 +20,6 @@ from dataclasses import dataclass
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 __all__ = ["DataConfig", "token_pipeline", "synthetic_lm_batch", "synthetic_batches",

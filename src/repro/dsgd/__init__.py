@@ -1,27 +1,48 @@
 """Decentralized-SGD runtime: BA-Topo gossip as a TPU collective schedule."""
-from .schedule import GossipSchedule, bytes_per_sync, reconstruct_weight_matrix, schedule_from_topology
+from .schedule import (
+    GossipSchedule,
+    bytes_per_sync,
+    edge_color,
+    reconstruct_weight_matrix,
+    schedule_from_topology,
+)
 from .compression import (
     ChocoState,
     choco_gamma,
     choco_gossip_init,
     choco_gossip_step,
+    choco_mix,
+    compress_random_k,
+    compress_top_k,
     identity_compressor,
     random_k_compressor,
     top_k_compressor,
 )
-from .dynamic import cycle_contraction, round_robin_schedules
+from .dynamic import (
+    cycle_contraction,
+    cycle_tensor,
+    round_robin_schedules,
+    stack_cycles,
+    static_cycle,
+)
 from .gossip import (
     gossip_shard,
     gossip_sim,
     gossip_sim_tree,
     gossip_sim_tree_rowloop,
     padded_neighbors,
+    select_cycle_matrix,
 )
 from .sim import (
+    CommSpec,
     DSGDSimConfig,
     accuracy_curve_host,
+    accuracy_curve_host_cross,
     accuracy_curves,
     accuracy_curves_seeds,
+    consensus_curve_host_cross,
+    consensus_curves_cross,
+    train_curves_cross,
 )
 from .trainer import (
     DSGDState,
@@ -34,14 +55,19 @@ from .trainer import (
 )
 
 __all__ = [
-    "GossipSchedule", "bytes_per_sync", "reconstruct_weight_matrix",
-    "schedule_from_topology", "gossip_shard", "gossip_sim", "gossip_sim_tree",
-    "gossip_sim_tree_rowloop", "padded_neighbors",
+    "GossipSchedule", "bytes_per_sync", "edge_color",
+    "reconstruct_weight_matrix", "schedule_from_topology",
+    "gossip_shard", "gossip_sim", "gossip_sim_tree",
+    "gossip_sim_tree_rowloop", "padded_neighbors", "select_cycle_matrix",
     "DSGDSimConfig", "accuracy_curve_host", "accuracy_curves",
     "accuracy_curves_seeds",
+    "CommSpec", "train_curves_cross", "accuracy_curve_host_cross",
+    "consensus_curves_cross", "consensus_curve_host_cross",
     "ChocoState", "choco_gamma", "choco_gossip_init", "choco_gossip_step",
+    "choco_mix", "compress_top_k", "compress_random_k",
     "identity_compressor", "random_k_compressor", "top_k_compressor",
-    "cycle_contraction", "round_robin_schedules",
+    "cycle_contraction", "cycle_tensor", "round_robin_schedules",
+    "stack_cycles", "static_cycle",
     "DSGDState", "allreduce_train_step", "dsgd_train_step", "init_dsgd_state",
     "make_matmul_gossip_train_step", "make_sharded_train_step", "make_tp_train_step",
 ]

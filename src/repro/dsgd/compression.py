@@ -10,9 +10,15 @@ error-feedback keeps convergence (at a γ-slowed consensus rate).
     x̂_j  += q_j  for every neighbor j    (all nodes track the same x̂'s)
     x_i  += γ Σ_j W_ij (x̂_j − x̂_i)      (gossip on the estimates)
 
-The net effect benchmarked in benchmarks/bench_compression.py: with top-10%
-compression, bytes-to-consensus drop whenever the topology is
-bandwidth-bound — exactly the regime the paper targets.
+The compression primitives (``compress_top_k`` / ``compress_random_k``) and
+the estimate-gossip update (``choco_mix``) are standalone functions so the
+device-resident cross-product engine (``repro.dsgd.sim``, DESIGN.md §12) and
+the host-loop oracles here share ONE definition — parity between the scan
+engine and ``choco_gossip_step`` is then a matter of key streams, not of
+reimplemented math. The net effect is benchmarked in
+benchmarks/bench_compression.py: with top-10% compression, bytes-to-consensus
+drop whenever the topology is bandwidth-bound — exactly the regime the paper
+targets.
 """
 from __future__ import annotations
 
@@ -22,12 +28,14 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from repro.core.graph import Topology, weight_matrix_from_weights
+from repro.core.graph import Topology
 
-__all__ = ["Compressor", "top_k_compressor", "random_k_compressor",
+__all__ = ["Compressor", "compress_top_k", "compress_random_k",
+           "compression_ratio", "top_k_compressor", "random_k_compressor",
            "identity_compressor", "ChocoState", "choco_gossip_init",
-           "choco_gossip_step", "choco_gamma"]
+           "choco_gossip_step", "choco_mix", "choco_gamma"]
 
 
 class Compressor(NamedTuple):
@@ -36,25 +44,80 @@ class Compressor(NamedTuple):
     name: str
 
 
+def compression_ratio(frac: float) -> float:
+    """Transmitted fraction ω of the dense bytes for a sparsifying compressor:
+    indices cost ~half a float each in practice, so charge 1.5× values."""
+    return min(1.5 * frac, 1.0)
+
+
+def _kth_largest_bitselect(absx: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Exact k-th largest per row of a NON-NEGATIVE array, by radix select.
+
+    For non-negative IEEE floats, value order equals unsigned integer order
+    of the bit patterns, so the k-th largest is found by building its bit
+    pattern top-down: keep bit b iff at least k elements match the prefix.
+    Cost is ``bits`` vectorized compare+count passes — measured ~5× cheaper
+    than ``lax.top_k`` on XLA:CPU at (1360 rows × 512, k=128), whose
+    sort-bound TopK dominated the whole CHOCO engine (DESIGN.md §12).
+    Returns the k-th largest VALUE per row (shape ``absx.shape[:-1] + (1,)``),
+    bit-identical to ``lax.top_k(absx, k)[0][..., k-1]``.
+    """
+    bits = 64 if absx.dtype == jnp.float64 else 32
+    uint = jnp.uint64 if bits == 64 else jnp.uint32
+    v = lax.bitcast_convert_type(absx, uint)
+
+    def body(b, prefix):
+        cand = prefix | uint(1) << uint(bits - 1 - b)
+        cnt = jnp.sum(v >= cand[..., None], axis=-1)
+        return jnp.where(cnt >= k, cand, prefix)
+
+    prefix = lax.fori_loop(0, bits, body,
+                           jnp.zeros(absx.shape[:-1], uint))
+    return lax.bitcast_convert_type(prefix, absx.dtype)[..., None]
+
+
+def compress_top_k(x: jnp.ndarray, frac: float,
+                   method: str = "auto") -> jnp.ndarray:
+    """Keep the top-⌈frac·d⌉ magnitudes per worker row, zero the rest.
+
+    The threshold is the exact k-th largest |x| (k static) and the kept set
+    is ``|x| >= thresh`` — the same threshold value and tie rule as the seed
+    sort-and-slice implementation. ``method`` picks how the threshold is
+    computed: ``"top_k"`` = ``jax.lax.top_k``; ``"bitselect"`` = the radix
+    select above; ``"auto"`` = bitselect on CPU (where XLA's TopK is
+    sort-bound and ~40× slower), top_k elsewhere. All three are bit-identical
+    (tested), so engine/oracle parity never depends on the choice.
+    """
+    flat = x.reshape(x.shape[0], -1)
+    k = max(int(np.ceil(frac * flat.shape[1])), 1)
+    absx = jnp.abs(flat)
+    if method == "auto":
+        method = "bitselect" if jax.default_backend() == "cpu" else "top_k"
+    if method == "bitselect":
+        thresh = _kth_largest_bitselect(absx, k)
+    else:
+        thresh = lax.top_k(absx, k)[0][:, k - 1:k]
+    mask = absx >= thresh
+    return (flat * mask).reshape(x.shape)
+
+
+def compress_random_k(x: jnp.ndarray, frac: float, key) -> jnp.ndarray:
+    """Unbiased random-k sparsification (scaled by 1/frac), keyed per call."""
+    flat = x.reshape(x.shape[0], -1)
+    mask = jax.random.bernoulli(key, frac, flat.shape)
+    return (flat * mask / frac).reshape(x.shape)
+
+
 def top_k_compressor(frac: float) -> Compressor:
     """Keep the top-⌈frac·d⌉ magnitudes (per worker), zero the rest."""
-    def fn(x, key):
-        flat = x.reshape(x.shape[0], -1)
-        k = max(int(np.ceil(frac * flat.shape[1])), 1)
-        thresh = -jnp.sort(-jnp.abs(flat), axis=1)[:, k - 1:k]
-        mask = jnp.abs(flat) >= thresh
-        return (flat * mask).reshape(x.shape)
-    # indices cost ~half a float each in practice; charge 1.5× values
-    return Compressor(fn, min(1.5 * frac, 1.0), f"top{int(frac * 100)}%")
+    return Compressor(lambda x, key: compress_top_k(x, frac),
+                      compression_ratio(frac), f"top{int(frac * 100)}%")
 
 
 def random_k_compressor(frac: float) -> Compressor:
     """Unbiased random-k sparsification (scaled by 1/frac)."""
-    def fn(x, key):
-        flat = x.reshape(x.shape[0], -1)
-        mask = jax.random.bernoulli(key, frac, flat.shape)
-        return (flat * mask / frac).reshape(x.shape)
-    return Compressor(fn, min(1.5 * frac, 1.0), f"rand{int(frac * 100)}%")
+    return Compressor(lambda x, key: compress_random_k(x, frac, key),
+                      compression_ratio(frac), f"rand{int(frac * 100)}%")
 
 
 def identity_compressor() -> Compressor:
@@ -76,9 +139,23 @@ def choco_gossip_init(x0: jnp.ndarray) -> ChocoState:
     return ChocoState(x=x0, x_hat=jnp.zeros_like(x0))
 
 
+def choco_mix(x: jnp.ndarray, x_hat: jnp.ndarray, W: jnp.ndarray,
+              gamma) -> jnp.ndarray:
+    """x + γ (W − I) x̂ on a stacked ``(n, ...)`` array.
+
+    The worker dimension is contracted in place (dot_general on the native
+    shape, same convention as ``gossip_sim``), so parameter-pytree leaves of
+    any rank flow through without a merging reshape. ``gamma`` may be traced
+    data — the cross-product engine vmaps over a γ grid.
+    """
+    delta = lax.dot_general(
+        W - jnp.eye(W.shape[0], dtype=W.dtype), x_hat,
+        (((1,), (0,)), ((), ())))
+    return x + gamma * delta
+
+
 def choco_gossip_step(state: ChocoState, W: jnp.ndarray, comp: Compressor,
                       gamma: float, key) -> ChocoState:
     q = comp.fn(state.x - state.x_hat, key)          # innovation, compressed
     x_hat = state.x_hat + q                          # everyone updates copies
-    mix = (W - jnp.eye(W.shape[0], dtype=W.dtype)) @ x_hat
-    return ChocoState(x=state.x + gamma * mix, x_hat=x_hat)
+    return ChocoState(x=choco_mix(state.x, x_hat, W, gamma), x_hat=x_hat)

@@ -21,12 +21,13 @@ import numpy as np
 
 import jax
 
-from repro.core.graph import Topology, weight_matrix_from_weights
+from repro.core.graph import Topology
 
 from .gossip import gossip_shard
-from .schedule import GossipSchedule, _edge_color
+from .schedule import GossipSchedule, edge_color
 
 __all__ = ["round_robin_schedules", "cycle_weight_matrices", "cycle_contraction",
+           "cycle_tensor", "static_cycle", "stack_cycles",
            "gossip_shard_dynamic"]
 
 
@@ -35,19 +36,31 @@ def round_robin_schedules(topo: Topology) -> list[GossipSchedule]:
 
     Edge weights are re-balanced for single-matching application: within a
     matching, the pairwise-averaging-with-weight step uses
-    w_ij' = min(2·g_ij, 0.5) (a lazy pairwise average), which keeps each W_c
+    w_ij' = min(2·W_ij, 0.5) (a lazy pairwise average), which keeps each W_c
     doubly stochastic and PSD-contractive regardless of the static weights.
+    Weights are read off the topology's realized gossip matrix ``topo.W``
+    (NOT ``topo.g``), so symmetric W-override baselines — U-EquiStatic —
+    decompose into their actual mixing weights instead of degenerating to
+    identity rounds. A directed override (the exponential graph) has no
+    symmetric matching decomposition and is rejected — its ``g`` vector is
+    all-zero, so a silent fallback would produce identity rounds, the exact
+    bug class this check exists to prevent. Callers (the benches) skip
+    directed topologies via ``topo.meta['directed']``.
     """
     n = topo.n
-    eidx = {tuple(sorted(e)): k for k, e in enumerate(topo.edges)}
-    matchings = _edge_color(n, list(topo.edges))
+    W = np.asarray(topo.W)
+    if not np.allclose(W, W.T):
+        raise ValueError(
+            f"{topo.name}: asymmetric W has no symmetric matching "
+            "decomposition (round-robin gossip needs pairwise exchanges)")
+    matchings = edge_color(n, list(topo.edges))
     schedules = []
     for c, matching in enumerate(matchings):
         pairs: list[tuple[int, int]] = []
         recv = np.zeros(n)
         selfw = np.ones(n)
         for i, j in matching:
-            w = min(2.0 * float(topo.g[eidx[tuple(sorted((i, j)))]]), 0.5)
+            w = min(2.0 * float(W[i, j]), 0.5)
             pairs.extend([(i, j), (j, i)])
             recv[i] = w
             recv[j] = w
@@ -76,6 +89,50 @@ def cycle_contraction(schedules: list[GossipSchedule]) -> float:
         prod = W @ prod
     dev = prod - np.ones((n, n)) / n
     return float(np.max(np.abs(np.linalg.eigvals(dev))))
+
+
+def cycle_tensor(topo: Topology) -> np.ndarray:
+    """The round-robin matching cycle as ONE stacked ``(R, n, n)`` tensor.
+
+    Step ``t`` of the dynamic scheme applies ``Wc[t % R]`` — the same
+    matrix sequence ``gossip_shard_dynamic`` realizes with its
+    ``lax.switch`` over schedules (each W_c is the reconstruction of
+    schedule c). The stacked form is what the device-resident engine
+    gathers from inside its scan (``repro.dsgd.sim``, DESIGN.md §12):
+    a step-index gather instead of host branches.
+    """
+    return np.stack(cycle_weight_matrices(round_robin_schedules(topo)))
+
+
+def static_cycle(W: np.ndarray) -> np.ndarray:
+    """A static topology as a length-1 cycle: every step applies the full W.
+
+    Lets the cross-product engine treat {static, dynamic} uniformly — the
+    step-index gather ``Wc[t % 1]`` always selects W.
+    """
+    return np.asarray(W)[None]
+
+
+def stack_cycles(cycles) -> tuple[np.ndarray, np.ndarray]:
+    """Pad variable-length cycles to ``(B, R_max, n, n)`` + lengths ``(B,)``.
+
+    Padding slots are identity matrices and UNREACHABLE: the engine's step
+    index is ``t % R_b`` which never exceeds the true cycle length, so the
+    pad value is irrelevant to the computation (identity keeps accidental
+    selection harmless and debuggable). This is what lets topologies with
+    different matching counts share one vmapped dispatch.
+    """
+    cycles = [np.asarray(c, dtype=np.float64) for c in cycles]
+    if not cycles:
+        return np.zeros((0, 1, 0, 0)), np.zeros((0,), np.int32)
+    n = cycles[0].shape[-1]
+    r_max = max(c.shape[0] for c in cycles)
+    out = np.broadcast_to(np.eye(n), (len(cycles), r_max, n, n)).copy()
+    lens = np.empty(len(cycles), np.int32)
+    for b, c in enumerate(cycles):
+        out[b, :c.shape[0]] = c
+        lens[b] = c.shape[0]
+    return out, lens
 
 
 def gossip_shard_dynamic(tree, schedules: list[GossipSchedule], step, axis):

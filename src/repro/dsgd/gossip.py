@@ -16,7 +16,20 @@ import jax.numpy as jnp
 from .schedule import GossipSchedule
 
 __all__ = ["gossip_shard", "gossip_sim", "gossip_sim_tree",
-           "gossip_sim_tree_rowloop", "padded_neighbors"]
+           "gossip_sim_tree_rowloop", "padded_neighbors",
+           "select_cycle_matrix"]
+
+
+def select_cycle_matrix(Wc: jnp.ndarray, R, t) -> jnp.ndarray:
+    """``W_{t mod R}`` from a stacked ``(R_max, n, n)`` cycle tensor.
+
+    ``t`` (the global step counter carried through the scan) and ``R`` (the
+    true cycle length, ≤ R_max after padding) may both be traced scalars: the
+    selection is a dynamic step-index gather, NOT a ``lax.switch`` over host
+    branches, so it vmaps across topologies whose cycles have different
+    lengths (DESIGN.md §12). Static topologies pass R = 1 and always get W.
+    """
+    return jax.lax.dynamic_index_in_dim(Wc, jnp.mod(t, R), 0, keepdims=False)
 
 
 def gossip_shard(tree, sched: GossipSchedule, axis):

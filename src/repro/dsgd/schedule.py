@@ -23,8 +23,8 @@ import numpy as np
 
 from repro.core.graph import Topology, weight_matrix_from_weights
 
-__all__ = ["GossipSchedule", "schedule_from_topology", "reconstruct_weight_matrix",
-           "bytes_per_sync"]
+__all__ = ["GossipSchedule", "edge_color", "schedule_from_topology",
+           "reconstruct_weight_matrix", "bytes_per_sync"]
 
 
 @dataclass(frozen=True)
@@ -55,26 +55,28 @@ def _greedy_color(n: int, edges: list[tuple[int, int]],
                   order: list[int]) -> dict[int, int]:
     node_colors: list[set[int]] = [set() for _ in range(n)]
     color_of: dict[int, int] = {}
-    for l in order:
-        i, j = edges[l]
+    for ei in order:
+        i, j = edges[ei]
         c = 0
         while c in node_colors[i] or c in node_colors[j]:
             c += 1
-        color_of[l] = c
+        color_of[ei] = c
         node_colors[i].add(c)
         node_colors[j].add(c)
     return color_of
 
 
-def _edge_color(n: int, edges: list[tuple[int, int]],
-                trials: int = 16) -> list[list[tuple[int, int]]]:
+def edge_color(n: int, edges: list[tuple[int, int]],
+               trials: int = 16) -> list[list[tuple[int, int]]]:
     """Proper edge coloring → list of matchings (= ppermute rounds).
 
     Each round costs one full collective-permute of the params shard, so the
     color count is the gossip critical path: Δ ≤ χ′ ≤ Δ+1 (Vizing). Greedy
     can use up to 2Δ−1; we take the best of several greedy orders (degree-sum
     first + random restarts), which empirically reaches Δ or Δ+1 on the
-    BA-Topo/exponential graphs used here.
+    BA-Topo/exponential graphs used here. Deterministic for a given edge
+    list — the round-robin cycle tensor (dynamic.py) and the per-matching
+    bandwidth model (benchmarks) rely on getting the SAME matching order.
     """
     m = len(edges)
     deg = np.zeros(n, dtype=np.int64)
@@ -82,7 +84,7 @@ def _edge_color(n: int, edges: list[tuple[int, int]],
         deg[i] += 1
         deg[j] += 1
     orders = [sorted(range(m),
-                     key=lambda l: -(deg[edges[l][0]] + deg[edges[l][1]]))]
+                     key=lambda ei: -(deg[edges[ei][0]] + deg[edges[ei][1]]))]
     rng = np.random.default_rng(0)
     for _ in range(max(trials - 1, 0)):
         orders.append(list(rng.permutation(m)))
@@ -95,16 +97,20 @@ def _edge_color(n: int, edges: list[tuple[int, int]],
             break  # Δ rounds — optimal
     ncolors = 1 + max(best.values()) if best else 0
     matchings: list[list[tuple[int, int]]] = [[] for _ in range(ncolors)]
-    for l, c in best.items():
-        matchings[c].append(edges[l])
+    for ei, c in best.items():
+        matchings[c].append(edges[ei])
     return matchings
+
+
+#: Backwards-compatible alias (pre-ISSUE-5 private name).
+_edge_color = edge_color
 
 
 def schedule_from_topology(topo: Topology) -> GossipSchedule:
     """Compile a Topology (graph + weights g) into a ppermute schedule."""
     n = topo.n
     W = weight_matrix_from_weights(n, topo.edges, topo.g)
-    matchings = _edge_color(n, list(topo.edges))
+    matchings = edge_color(n, list(topo.edges))
     perms, recv = [], []
     for matching in matchings:
         pairs: list[tuple[int, int]] = []

@@ -28,10 +28,32 @@ topology), this module compiles the entire run into one device program:
 The model is the benchmark's 2-layer-MLP CIFAR stand-in (``init_mlp`` /
 ``mlp_logits`` / ``mlp_loss``), exposed here so benchmarks and tests share
 one definition. See DESIGN.md §11.
+
+Cross-product engine (DESIGN.md §12): the same scan architecture extended to
+the full scenario cross-product {static, dynamic round-robin} × {dense,
+top-k CHOCO, random-k CHOCO}. Topology cycles are stacked ``(R, n, n)``
+tensors (``repro.dsgd.dynamic.stack_cycles``) and the per-step matrix is a
+step-index GATHER inside the scan (``select_cycle_matrix`` — no
+``lax.switch`` host branches, so topologies with different cycle lengths
+vmap together); CHOCO's error-feedback state (x̂ per parameter leaf, PRNG
+key for random-k) rides the scan carry while γ is a vmapped data leaf.
+
+  - ``train_curves_cross``     — time-to-accuracy for B = (topology-cycle, γ)
+    runs in one vmapped dispatch; batch order bit-identical to the host
+    loops (same ``epoch_permutations`` stream).
+  - ``consensus_curves_cross`` — consensus-error curves x ← mix(x) for the
+    same cross product (the §VI-A-style workload of bench_dynamic /
+    bench_compression), one dispatch.
+  - ``accuracy_curve_host_cross`` / ``consensus_curve_host_cross`` — the
+    per-iteration host loops (one dispatch + host sync per step), kept as
+    the ``engine="host"`` fallbacks and parity oracles. They share the mix
+    helper and key-split stream with the scan engine, so parity is exact up
+    to scan-vs-loop float reassociation.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from dataclasses import dataclass
 
 import numpy as np
@@ -42,12 +64,25 @@ from jax import lax
 
 from repro.data import epoch_permutations
 
-from .gossip import gossip_sim_tree
+from .compression import (
+    Compressor,
+    choco_mix,
+    compress_random_k,
+    compress_top_k,
+    compression_ratio,
+    identity_compressor,
+    random_k_compressor,
+    top_k_compressor,
+)
+from .dynamic import stack_cycles
+from .gossip import gossip_sim_tree, select_cycle_matrix
 
 __all__ = [
     "DSGDSimConfig", "init_mlp", "mlp_logits", "mlp_loss",
     "train_curve", "accuracy_curves", "accuracy_curves_seeds",
     "accuracy_curve_host",
+    "CommSpec", "train_curves_cross", "accuracy_curve_host_cross",
+    "consensus_curves_cross", "consensus_curve_host_cross",
 ]
 
 
@@ -242,3 +277,306 @@ def accuracy_curve_host(W, X, y, parts, Xte, yte,
             params, mom = step(params, mom, xb, yb)
         accs.append(float(accuracy(params)))
     return np.asarray(accs), iters
+
+
+# ---------------------------------------------------------------------------
+# cross-product engine: {static, dynamic cycle} × {dense, CHOCO compressors}
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CommSpec:
+    """Static (hashable → jit-cache key) half of the communication config.
+
+    ``compressor`` ∈ {"dense", "top_k", "random_k"}: dense applies x ← W_t x
+    directly; the CHOCO modes gossip on compressed-innovation estimates with
+    the error-feedback state threaded through the scan carry. ``frac`` is the
+    kept fraction (fixes the static k of ``lax.top_k``). The data half — the
+    cycle tensor, cycle length R, and γ — is vmapped, so one compiled variant
+    per CommSpec serves every topology × γ grid point.
+    """
+    compressor: str = "dense"
+    frac: float = 1.0
+
+    def __post_init__(self):
+        if self.compressor not in ("dense", "top_k", "random_k"):
+            raise ValueError(f"unknown compressor {self.compressor!r}")
+
+    @property
+    def choco(self) -> bool:
+        return self.compressor != "dense"
+
+    @property
+    def ratio(self) -> float:
+        """Transmitted fraction ω of the dense bytes (Eq. 34 time scaling)."""
+        return 1.0 if not self.choco else compression_ratio(self.frac)
+
+    @property
+    def name(self) -> str:
+        if not self.choco:
+            return "dense"
+        tag = "top" if self.compressor == "top_k" else "rand"
+        return f"{tag}{int(self.frac * 100)}%"
+
+    def to_compressor(self) -> Compressor:
+        """The equivalent host-loop :class:`Compressor` (oracle paths)."""
+        if not self.choco:
+            return identity_compressor()
+        if self.compressor == "top_k":
+            return top_k_compressor(self.frac)
+        return random_k_compressor(self.frac)
+
+
+def _mix_pytree(spec: CommSpec, x, hat, W, gamma, key):
+    """One CHOCO exchange on stacked ``(n, ...)`` pytrees → (x', x̂').
+
+    Leaves are processed in ``jax.tree.flatten`` order with per-leaf keys
+    ``fold_in(key, leaf_index)`` — the host oracles reuse this function, so
+    engine/oracle parity is by construction, not by re-derivation.
+    """
+    leaves, tdef = jax.tree.flatten(x)
+    hat_leaves = jax.tree.leaves(hat)
+    out_x, out_h = [], []
+    for i, (xl, hl) in enumerate(zip(leaves, hat_leaves)):
+        if spec.compressor == "top_k":
+            q = compress_top_k(xl - hl, spec.frac)
+        else:
+            q = compress_random_k(xl - hl, spec.frac,
+                                  jax.random.fold_in(key, i))
+        hl = hl + q
+        out_x.append(choco_mix(xl, hl, W, gamma))
+        out_h.append(hl)
+    return jax.tree.unflatten(tdef, out_x), jax.tree.unflatten(tdef, out_h)
+
+
+def _train_cross_impl(Wc, R, gamma, X, y, Xte, yte, perm, params, mom, key0,
+                      lr, momentum, *, spec: CommSpec):
+    """One cross-product DSGD run → per-epoch mean-model accuracy (epochs,).
+
+    Wc (R_max, n, n) padded cycle tensor; R () int32 true cycle length;
+    gamma () CHOCO step size (ignored for dense); key0 the compressor PRNG
+    stream head. The global step counter t rides the carry so the gossip
+    matrix of iteration t is the gather Wc[t % R] — bit-identical to the
+    host rule (``gossip_shard_dynamic``'s ``step % R``). Pure — jit/vmap
+    applied by the cached wrappers.
+    """
+    grad_fn = jax.vmap(jax.grad(mlp_loss))
+
+    def it_body(carry, idx):                      # idx: (n, batch)
+        if spec.choco:
+            params, mom, hat, t, key = carry
+        else:
+            params, mom, t = carry
+        xb, yb = X[idx], y[idx]                   # on-device batch gather
+        g = grad_fn(params, xb, yb)
+        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        W = select_cycle_matrix(Wc, R, t)
+        if spec.choco:
+            key, sub = jax.random.split(key)
+            params, hat = _mix_pytree(spec, params, hat, W, gamma, sub)
+            return (params, mom, hat, t + 1, key), None
+        params = gossip_sim_tree(params, W.astype(jnp.float32))
+        return (params, mom, t + 1), None
+
+    def epoch_body(carry, perm_e):                # perm_e: (iters, n, batch)
+        carry, _ = lax.scan(it_body, carry, perm_e)
+        mean = jax.tree.map(lambda a: a.mean(axis=0), carry[0])
+        pred = jnp.argmax(mlp_logits(mean, Xte), axis=1)
+        return carry, jnp.mean(pred == yte)
+
+    t0 = jnp.int32(0)
+    if spec.choco:
+        hat = jax.tree.map(jnp.zeros_like, params)
+        init = (params, mom, hat, t0, key0)
+    else:
+        init = (params, mom, t0)
+    _, accs = lax.scan(epoch_body, init, perm)
+    return accs
+
+
+@functools.lru_cache(maxsize=None)
+def _cross_train_fns(spec: CommSpec):
+    # batched over (cycle tensor, cycle length, γ); data/init/batch order and
+    # the compressor key stream are shared across the whole cross product
+    impl = functools.partial(_train_cross_impl, spec=spec)
+    return jax.jit(jax.vmap(impl, in_axes=(0, 0, 0) + (None,) * 10))
+
+
+def train_curves_cross(cycles, gammas, spec: CommSpec, X, y, parts, Xte, yte,
+                       cfg: DSGDSimConfig = DSGDSimConfig()):
+    """Train B = len(cycles) cross-product runs in ONE batched device call.
+
+    ``cycles``: list of (R_b, n, n) arrays — ``static_cycle(W)`` for static
+    topologies, ``cycle_tensor(topo)`` for round-robin dynamic ones; lengths
+    may differ (padded + gathered, never branched). ``gammas``: (B,) CHOCO
+    step sizes, ignored for dense. Batch order is bit-identical to the host
+    loops (same ``epoch_permutations`` stream); the compressor key stream is
+    ``PRNGKey(cfg.seed + 1)``, split once per iteration.
+    Returns (accs (B, epochs), iters_per_epoch).
+    """
+    Wc, R = stack_cycles(cycles)
+    Wc = jnp.asarray(Wc, jnp.float32)
+    n = Wc.shape[-1]
+    perm = jnp.asarray(epoch_permutations(parts, cfg.epochs, cfg.batch,
+                                          seed=cfg.seed))
+    classes = int(np.asarray(y).max()) + 1
+    params, mom = _init_worker_state(n, X.shape[-1], classes, cfg)
+    key0 = jax.random.PRNGKey(cfg.seed + 1)
+    gammas = jnp.asarray(gammas, jnp.float32)
+    accs = _cross_train_fns(spec)(Wc, jnp.asarray(R), gammas, X, y, Xte, yte, perm,
+                   params, mom, key0, cfg.lr, cfg.momentum)
+    return accs, perm.shape[1]
+
+
+def accuracy_curve_host_cross(cycle, gamma, spec: CommSpec, X, y, parts,
+                              Xte, yte, cfg: DSGDSimConfig = DSGDSimConfig()):
+    """Per-iteration host loop for ONE cross-product run — the
+    ``engine="host"`` fallback and the parity oracle of
+    :func:`train_curves_cross`.
+
+    Same batch order (``epoch_permutations``), same host-side cycle rule
+    ``cycle[t % R]``, same mix helper and per-iteration key split as the
+    scan engine. Returns (accs (epochs,), iters).
+    """
+    cycle = [jnp.asarray(W, jnp.float32) for W in np.asarray(cycle)]
+    n = cycle[0].shape[-1]
+    classes = int(np.asarray(y).max()) + 1
+    params, mom = _init_worker_state(n, X.shape[-1], classes, cfg)
+    hat = jax.tree.map(jnp.zeros_like, params)
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    lr, momentum = cfg.lr, cfg.momentum
+    gamma = jnp.float32(gamma)
+
+    grad_fn = jax.vmap(jax.grad(mlp_loss))
+
+    @jax.jit
+    def step(params, mom, hat, xb, yb, W, sub):
+        g = grad_fn(params, xb, yb)
+        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        if spec.choco:
+            params, hat = _mix_pytree(spec, params, hat, W, gamma, sub)
+        else:
+            params = gossip_sim_tree(params, W)
+        return params, mom, hat
+
+    @jax.jit
+    def accuracy(params):
+        mean = jax.tree.map(lambda a: a.mean(axis=0), params)
+        pred = jnp.argmax(mlp_logits(mean, Xte), axis=1)
+        return jnp.mean(pred == yte)
+
+    perm = epoch_permutations(parts, cfg.epochs, cfg.batch, seed=cfg.seed)
+    iters = perm.shape[1]
+    accs = []
+    t = 0
+    for e in range(cfg.epochs):
+        for it in range(iters):
+            idx = perm[e, it]                     # (n, batch)
+            xb = jnp.stack([X[idx[w]] for w in range(n)])
+            yb = jnp.stack([y[idx[w]] for w in range(n)])
+            key, sub = jax.random.split(key)
+            params, mom, hat = step(params, mom, hat, xb, yb,
+                                    cycle[t % len(cycle)], sub)
+            t += 1
+        accs.append(float(accuracy(params)))
+    return np.asarray(accs), iters
+
+
+def _consensus_cross_impl(Wc, R, gamma, x0, key0, ts, *, spec: CommSpec):
+    """Consensus-error curve of one cross-product run → errors (iters+1,).
+
+    x ← W_t x (dense) or one CHOCO step (compressed) per iteration, with the
+    consensus error ‖x − x̄‖ recorded on device — zero host round-trips.
+    """
+    def step(carry, t):
+        W = select_cycle_matrix(Wc, R, t)
+        if spec.choco:
+            x, hat, key = carry
+            key, sub = jax.random.split(key)
+            x, hat = _mix_pytree(spec, x, hat, W, gamma, sub)
+            carry = (x, hat, key)
+        else:
+            x = W @ carry
+            carry = x
+        return carry, jnp.linalg.norm(x - x.mean(axis=0, keepdims=True))
+
+    e0 = jnp.linalg.norm(x0 - x0.mean(axis=0, keepdims=True))
+    init = (x0, jnp.zeros_like(x0), key0) if spec.choco else x0
+    _, errs = lax.scan(step, init, ts)
+    return jnp.concatenate([e0[None], errs])
+
+
+@functools.lru_cache(maxsize=None)
+def _cross_consensus_fns(spec: CommSpec):
+    impl = functools.partial(_consensus_cross_impl, spec=spec)
+    return jax.jit(jax.vmap(impl, in_axes=(0, 0, 0, None, None, None)))
+
+
+def consensus_curves_cross(cycles, gammas, spec: CommSpec, x0, iters: int,
+                           seed: int = 0):
+    """Consensus curves for B = len(cycles) runs in ONE batched device call.
+
+    Shared x0 (n, dim) across runs (the host benches draw one initial value
+    per comparison); compressor key stream ``PRNGKey(seed + 1)``. Returns
+    errors (B, iters+1) as numpy.
+    """
+    Wc, R = stack_cycles(cycles)
+    x0 = jnp.asarray(x0)
+    Wc = jnp.asarray(Wc, x0.dtype)
+    gammas = jnp.asarray(gammas, x0.dtype)
+    key0 = jax.random.PRNGKey(seed + 1)
+    errs = _cross_consensus_fns(spec)(Wc, jnp.asarray(R), gammas, x0, key0, jnp.arange(iters))
+    return np.asarray(errs)
+
+
+@functools.lru_cache(maxsize=None)
+def _host_consensus_step(spec: CommSpec):
+    """One jitted consensus step per CommSpec — cached so a host sweep over
+    many (topology, γ) runs compiles ONCE instead of once per run (184
+    recompiles of an identical tiny program would otherwise land in the
+    host wall-clock that the tracked scan-vs-host speedup is gated on)."""
+    from .compression import choco_gossip_step
+
+    comp = spec.to_compressor()
+
+    @jax.jit
+    def step(state, W, gamma, key):
+        if spec.choco:
+            return choco_gossip_step(state, W, comp, gamma,
+                                     jax.random.fold_in(key, 0))
+        return state._replace(x=W @ state.x)
+
+    return step
+
+
+def consensus_curve_host_cross(cycle, gamma, spec: CommSpec, x0, iters: int,
+                               seed: int = 0, stop_rel: float | None = None):
+    """Per-iteration host loop for ONE consensus run — the seed bench
+    behaviour (one step dispatch + a ``float()`` sync per step) kept as the
+    ``engine="host"`` fallback and parity oracle. Same cycle rule
+    (``cycle[t % R]`` selected on host) and key stream as the scan engine;
+    the step itself is jitted so host/engine arithmetic is bit-identical
+    (the 1/frac error-feedback scaling amplifies any op-fusion roundoff
+    difference chaotically). ``stop_rel`` replays the seed bench's early
+    exit: the loop stops once the relative error reaches it. Returns
+    errors (≤ iters+1,) numpy.
+    """
+    from .compression import choco_gossip_init
+
+    x0 = jnp.asarray(x0)
+    cycle = [jnp.asarray(W, x0.dtype) for W in np.asarray(cycle)]
+    gamma = jnp.asarray(gamma, x0.dtype)
+    step = _host_consensus_step(spec)
+
+    state = choco_gossip_init(x0)
+    key = jax.random.PRNGKey(seed + 1)
+    errs = [float(jnp.linalg.norm(x0 - x0.mean(axis=0, keepdims=True)))]
+    for t in range(iters):
+        key, sub = jax.random.split(key)
+        state = step(state, cycle[t % len(cycle)], gamma, sub)
+        errs.append(float(jnp.linalg.norm(
+            state.x - state.x.mean(axis=0, keepdims=True))))
+        if stop_rel is not None and errs[-1] <= stop_rel * errs[0]:
+            break
+    return np.asarray(errs)

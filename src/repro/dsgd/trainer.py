@@ -18,10 +18,8 @@ Three step builders share the same math:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +30,7 @@ from repro.models import transformer
 from repro.optim import apply_updates
 
 from .gossip import gossip_shard, gossip_sim_tree, padded_neighbors
-from .schedule import GossipSchedule, schedule_from_topology
+from .schedule import GossipSchedule
 
 __all__ = ["DSGDState", "init_dsgd_state", "dsgd_train_step", "allreduce_train_step",
            "make_sharded_train_step"]

@@ -18,7 +18,6 @@ from repro.core import (
     BATopoConfig,
     bcube_constraints,
     intra_server_constraints,
-    node_level_constraints,
     optimize_topology,
     pod_boundary_constraints,
 )

@@ -15,7 +15,6 @@ import argparse
 import json
 import time
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

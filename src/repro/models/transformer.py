@@ -27,12 +27,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .attention import KVCache, attn_decode, attn_forward, init_attn, init_kv_cache
+from .attention import attn_decode, attn_forward, init_attn, init_kv_cache
 from .common import dense_init, embed_init, rms_norm, softcap
 from .mlp import gelu_mlp, init_gelu_mlp, init_swiglu, swiglu
 from .moe import init_moe, moe_forward
 from .partitioning import get_rules
-from .ssm import SSMCache, init_mamba2, init_ssm_cache, mamba2_decode, mamba2_forward
+from .ssm import init_mamba2, init_ssm_cache, mamba2_decode, mamba2_forward
 
 __all__ = [
     "init_params", "train_loss", "prefill", "decode_step", "init_caches",

@@ -24,7 +24,6 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-import numpy as np
 
 __all__ = ["HW", "RooflineReport", "collective_bytes_from_hlo", "model_flops",
            "analytic_flops_bytes", "roofline_report"]

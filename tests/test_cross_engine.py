@@ -1,0 +1,271 @@
+"""Parity tests for the cross-product gossip engines (DESIGN.md §12):
+dynamic-cycle scan vs the host matrix sequence (bit-equal) and host-loop
+curves, CHOCO scan vs the ``choco_gossip_step`` loop, and the vmapped
+cross product vs serial single runs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_baseline
+from repro.data import class_balanced_partition, make_classification_data
+from repro.dsgd.compression import choco_gossip_init, choco_gossip_step
+from repro.dsgd.dynamic import (
+    cycle_tensor,
+    cycle_weight_matrices,
+    round_robin_schedules,
+    stack_cycles,
+    static_cycle,
+)
+from repro.dsgd.gossip import select_cycle_matrix
+from repro.dsgd.schedule import reconstruct_weight_matrix
+from repro.dsgd.sim import (
+    CommSpec,
+    DSGDSimConfig,
+    accuracy_curve_host_cross,
+    accuracy_curves,
+    consensus_curve_host_cross,
+    consensus_curves_cross,
+    train_curves_cross,
+)
+
+N = 8
+CFG = DSGDSimConfig(epochs=2, batch=16, hidden=32, seed=0)
+
+
+@pytest.fixture(scope="module")
+def topologies():
+    return [make_baseline("ring", N), make_baseline("equistatic", N, M=2)]
+
+
+@pytest.fixture(scope="module")
+def cycles(topologies):
+    out = []
+    for t in topologies:
+        out += [static_cycle(t.W), cycle_tensor(t)]
+    return out
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return np.random.default_rng(0).normal(size=(N, 24))
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    X, y = make_classification_data(num_classes=6, dim=24,
+                                    samples_per_class=80, seed=0)
+    Xte, yte = make_classification_data(num_classes=6, dim=24,
+                                        samples_per_class=24, seed=0,
+                                        noise_seed=10_001)
+    parts = class_balanced_partition(y, N, seed=0)
+    return (jnp.asarray(X), jnp.asarray(y), parts,
+            jnp.asarray(Xte), jnp.asarray(yte))
+
+
+# --- cycle tensors ----------------------------------------------------------
+
+def test_cycle_tensor_is_schedule_reconstruction(topologies):
+    """The stacked tensor IS the matrix sequence gossip_shard_dynamic
+    realizes: entry c reconstructs schedule c."""
+    for topo in topologies:
+        scheds = round_robin_schedules(topo)
+        Wc = cycle_tensor(topo)
+        assert Wc.shape[0] == len(scheds)
+        for c, s in enumerate(scheds):
+            np.testing.assert_array_equal(Wc[c], reconstruct_weight_matrix(s))
+
+
+def test_select_cycle_matrix_bit_equal_sequence(topologies):
+    """Acceptance: the engine's step-index gather reproduces the host rule
+    ``Ws[t % R]`` (gossip_shard_dynamic's ``step % R`` switch) bit-exactly,
+    including when the cycle is padded for vmapping."""
+    for topo in topologies:
+        Ws = cycle_weight_matrices(round_robin_schedules(topo))
+        R = len(Ws)
+        Wc_pad, lens = stack_cycles([np.stack(Ws)])
+        Wc = jnp.asarray(Wc_pad[0])
+        for t in range(2 * R + 3):
+            got = np.asarray(select_cycle_matrix(Wc, jnp.int32(lens[0]),
+                                                 jnp.int32(t)))
+            np.testing.assert_array_equal(got, Ws[t % R])
+
+
+def test_stack_cycles_pads_with_identity(cycles):
+    Wc, lens = stack_cycles(cycles)
+    r_max = max(c.shape[0] for c in cycles)
+    assert Wc.shape == (len(cycles), r_max, N, N)
+    for b, c in enumerate(cycles):
+        assert lens[b] == c.shape[0]
+        np.testing.assert_array_equal(Wc[b, :lens[b]], c)
+        for r in range(lens[b], r_max):
+            np.testing.assert_array_equal(Wc[b, r], np.eye(N))
+
+
+def test_round_robin_uses_realized_W_not_g(topologies):
+    """Regression: U-EquiStatic stores its mixing matrix as a W override
+    (g is all-zero) — the decomposition must read topo.W, not topo.g,
+    instead of silently producing identity rounds."""
+    equi = topologies[1]
+    Wc = cycle_tensor(equi)
+    for c in range(Wc.shape[0]):
+        assert np.abs(Wc[c] - np.eye(N)).max() > 0.1
+
+
+# --- consensus engine -------------------------------------------------------
+
+def test_dynamic_consensus_scan_matches_host(cycles, x0):
+    """Acceptance: dense {static, round-robin} consensus curves from the
+    vmapped scan match the per-iteration host loops ≤ 1e-6 (relative)."""
+    errs = consensus_curves_cross(cycles, np.ones(len(cycles)), CommSpec(),
+                                  x0, 60, seed=0)
+    for b, c in enumerate(cycles):
+        host = consensus_curve_host_cross(c, 1.0, CommSpec(), x0, 60, seed=0)
+        np.testing.assert_allclose(errs[b], host, atol=1e-6 * host[0])
+
+
+def test_dynamic_consensus_matches_numpy_loop(topologies, x0):
+    """The engine also reproduces the seed bench's raw numpy loop
+    x ← Ws[t % R] x (the pre-engine host path)."""
+    for topo in topologies:
+        Ws = cycle_weight_matrices(round_robin_schedules(topo))
+        errs = consensus_curves_cross([np.stack(Ws)], [1.0], CommSpec(),
+                                      x0, 40, seed=0)[0]
+        x = x0.copy()
+        ref = [np.linalg.norm(x - x.mean(0))]
+        for t in range(40):
+            x = Ws[t % len(Ws)] @ x
+            ref.append(np.linalg.norm(x - x.mean(0)))
+        np.testing.assert_allclose(errs, ref, atol=1e-6 * ref[0])
+
+
+@pytest.mark.parametrize("spec,gamma", [(CommSpec("top_k", 0.25), 0.4),
+                                        (CommSpec("random_k", 0.25), 0.3)])
+def test_choco_consensus_scan_matches_step_loop(topologies, x0, spec, gamma):
+    """Acceptance: the CHOCO scan engine matches a per-iteration
+    ``choco_gossip_step`` loop (same key stream) ≤ 1e-6."""
+    W = jnp.asarray(static_cycle(topologies[0].W)[0])
+    errs = consensus_curves_cross([static_cycle(topologies[0].W)], [gamma],
+                                  spec, x0, 50, seed=0)[0]
+    comp = spec.to_compressor()
+    step = jax.jit(lambda s, key: choco_gossip_step(s, W, comp, gamma, key))
+    state = choco_gossip_init(jnp.asarray(x0))
+    key = jax.random.PRNGKey(1)                 # seed + 1, the engine stream
+    ref = [float(jnp.linalg.norm(x0 - x0.mean(0)))]
+    for _ in range(50):
+        key, sub = jax.random.split(key)
+        state = step(state, jax.random.fold_in(sub, 0))
+        ref.append(float(jnp.linalg.norm(
+            state.x - state.x.mean(axis=0, keepdims=True))))
+    np.testing.assert_allclose(errs, ref, atol=1e-6 * ref[0])
+
+
+def test_choco_dynamic_cross_matches_host(cycles, x0):
+    """Compressed × time-varying — the full cross product — against the
+    host loop."""
+    spec = CommSpec("top_k", 0.1)
+    gammas = [0.3, 0.5, 0.3, 0.5]
+    errs = consensus_curves_cross(cycles, gammas, spec, x0, 50, seed=0)
+    for b, (c, g) in enumerate(zip(cycles, gammas)):
+        host = consensus_curve_host_cross(c, g, spec, x0, 50, seed=0)
+        np.testing.assert_allclose(errs[b], host, atol=1e-6 * host[0])
+
+
+def test_consensus_vmapped_matches_serial_runs(cycles, x0):
+    """Acceptance: the vmapped cross product equals serial single-run
+    dispatches of the same engine."""
+    spec = CommSpec("random_k", 0.5)
+    gammas = np.array([0.2, 0.4, 0.6, 0.8])
+    batched = consensus_curves_cross(cycles, gammas, spec, x0, 30, seed=0)
+    for b, c in enumerate(cycles):
+        single = consensus_curves_cross([c], [gammas[b]], spec, x0, 30,
+                                        seed=0)[0]
+        np.testing.assert_allclose(batched[b], single, rtol=1e-12, atol=0)
+
+
+def test_choco_preserves_mean_on_cycles(cycles, x0):
+    """CHOCO on a time-varying cycle still conserves the network mean (every
+    W_c is doubly stochastic; the x̂-gossip adds a zero-column-sum update)."""
+    spec = CommSpec("top_k", 0.25)
+    errs = consensus_curves_cross(cycles, np.full(len(cycles), 0.4), spec,
+                                  x0, 200, seed=0)
+    assert np.all(errs[:, -1] < errs[:, 0])      # contracts toward consensus
+
+
+# --- training engine --------------------------------------------------------
+
+ACC_TOL = 1.0 / 144 + 1e-7          # one borderline test sample of 144
+
+
+def test_train_dynamic_scan_matches_host(cycles, dataset):
+    X, y, parts, Xte, yte = dataset
+    accs, iters = train_curves_cross(cycles, np.ones(len(cycles)), CommSpec(),
+                                     X, y, parts, Xte, yte, CFG)
+    accs = np.asarray(accs)
+    assert accs.shape == (len(cycles), CFG.epochs)
+    for b, c in enumerate(cycles):
+        host, ih = accuracy_curve_host_cross(c, 1.0, CommSpec(), X, y, parts,
+                                             Xte, yte, CFG)
+        assert ih == iters
+        assert np.abs(accs[b] - host).max() <= ACC_TOL
+
+
+@pytest.mark.parametrize("spec,gamma", [(CommSpec("top_k", 0.25), 0.6),
+                                        (CommSpec("random_k", 0.5), 0.6)])
+def test_train_choco_scan_matches_host(topologies, dataset, spec, gamma):
+    X, y, parts, Xte, yte = dataset
+    cycles = [static_cycle(topologies[0].W), cycle_tensor(topologies[0])]
+    accs, _ = train_curves_cross(cycles, np.full(2, gamma), spec,
+                                 X, y, parts, Xte, yte, CFG)
+    accs = np.asarray(accs)
+    for b, c in enumerate(cycles):
+        host, _ = accuracy_curve_host_cross(c, gamma, spec, X, y, parts,
+                                            Xte, yte, CFG)
+        assert np.abs(accs[b] - host).max() <= ACC_TOL
+
+
+def test_train_static_dense_equals_pr4_engine(topologies, dataset):
+    """The cross engine collapses to the PR-4 static engine for {static,
+    dense}: identical curves from the same data/init/batch order."""
+    X, y, parts, Xte, yte = dataset
+    W = jnp.asarray(topologies[0].W, jnp.float32)
+    ref, _ = accuracy_curves(W, X, y, parts, Xte, yte, CFG)
+    got, _ = train_curves_cross([static_cycle(topologies[0].W)], [1.0],
+                                CommSpec(), X, y, parts, Xte, yte, CFG)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(ref), atol=1e-7)
+
+
+# --- compressor primitives --------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+@pytest.mark.parametrize("shape,frac", [((16, 512), 0.1), ((8, 130), 0.3),
+                                        ((4, 7), 0.5)])
+def test_topk_bitselect_bit_equal_to_lax_topk(dtype, shape, frac):
+    """The radix-select threshold path is bit-identical to lax.top_k —
+    including ties and zeros — so engine numerics never depend on which
+    backend-optimal method `compress_top_k(method="auto")` picks."""
+    from repro.dsgd.compression import _kth_largest_bitselect, compress_top_k
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(shape).astype(dtype)
+    x[0, :3] = 0.0
+    x[1, 1] = x[1, 2]                            # exact tie
+    a = np.asarray(compress_top_k(jnp.asarray(x), frac, method="bitselect"))
+    b = np.asarray(compress_top_k(jnp.asarray(x), frac, method="top_k"))
+    np.testing.assert_array_equal(a, b)
+    k = max(int(np.ceil(frac * shape[1])), 1)
+    t_np = np.sort(np.abs(x), axis=1)[:, shape[1] - k]
+    t_bs = np.asarray(_kth_largest_bitselect(jnp.abs(jnp.asarray(x)), k))
+    np.testing.assert_array_equal(t_bs[:, 0], t_np)
+
+
+# --- CommSpec ---------------------------------------------------------------
+
+def test_commspec_validation_and_ratio():
+    with pytest.raises(ValueError):
+        CommSpec("quantize")
+    assert CommSpec().ratio == 1.0
+    assert CommSpec("top_k", 0.1).ratio == pytest.approx(0.15)
+    assert CommSpec("random_k", 0.8).ratio == 1.0   # index cost caps at dense
+    assert CommSpec("top_k", 0.1).name == "top10%"
+    assert CommSpec("random_k", 0.25).to_compressor().name == "rand25%"

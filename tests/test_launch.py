@@ -1,9 +1,7 @@
 """Launch layer: distribution plans, spec assignment, serve/dryrun plumbing."""
 import numpy as np
-import pytest
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, INPUT_SHAPES, get_arch, shape_supported

@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+import jax
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -50,6 +52,10 @@ print("EP_GRAD_OK")
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not hasattr(jax, "set_mesh"),
+    reason="requires the jax>=0.6 top-level set_mesh API "
+           "(capability check — the subprocess script enters the mesh with it)")
 def test_expert_parallel_moe_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

@@ -17,7 +17,6 @@ from repro.data import (
     synthetic_lm_batch,
 )
 from repro.optim import (
-    adamw,
     apply_updates,
     clip_by_global_norm,
     global_norm,

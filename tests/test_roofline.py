@@ -4,7 +4,6 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.roofline import collective_bytes_from_hlo, model_flops
 from repro.roofline.analysis import _multipliers, _parse_computations, _shape_bytes
@@ -107,7 +106,12 @@ def test_analytic_flops_vs_hlo_single_layer():
     compiled = jax.jit(
         lambda p, b: transformer.prefill(p, cfg, b, cache_cap=S)).lower(
         params, batch).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    # capability shim: jax < 0.5 returns a one-element list of dicts from
+    # cost_analysis(), newer jax returns the dict directly
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo_flops = cost["flops"]
     n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     a = analytic_flops_bytes(
         cfg, InputShape("probe", S, B, "prefill"), "prefill",

@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+import jax
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -100,6 +102,10 @@ print("SHARDED_STEP_OK")
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not (hasattr(jax, "set_mesh") and hasattr(jax, "shard_map")),
+    reason="requires the jax>=0.6 top-level set_mesh/shard_map APIs "
+           "(capability check — the subprocess script uses both)")
 def test_multi_device_runtime():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

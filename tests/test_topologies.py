@@ -1,7 +1,6 @@
 """Benchmark-topology checks against the paper's reported spectral factors."""
 import math
 
-import numpy as np
 import pytest
 
 from repro.core.topologies import exponential, grid2d, hypercube, make_baseline, random_graph, ring, torus2d, u_equistatic
