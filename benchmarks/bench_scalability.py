@@ -1,5 +1,5 @@
 """Scalability across node counts — paper Table I, plus large-n constraint
-scenarios on the fast solver stack.
+scenarios on the fast solver stack and the multi-device partition compare.
 
 Asymptotic convergence factor + convergence time (consensus error ≤ 1e-4)
 for exponential vs U-EquiStatic vs BA-Topo, with BA-Topo's edge budget at
@@ -11,14 +11,30 @@ scenarios (node-level, intra-server n=8, BCube, pod-boundary) at
 solver stack (inexact CG + fp32, DESIGN.md §9) — no host-side
 per-iteration syncs, which is what makes n = 256/512 tractable.
 
+``--partition-nodes`` runs the tracked sharded-ADMM compare (DESIGN.md §13):
+for each n it solves the same homogeneous instance on (a) the single-device
+fast stack with eigh, (b) single-device with Newton–Schulz (the measured
+eigh↔NS crossover data), and (c) the edge-partitioned ``core.shard`` path
+across ``--partition-devices`` devices, then emits a compare row with the
+sharded-vs-single speedup and the best-candidate ``r_asym`` parity drift.
+If the current process has fewer devices it re-execs itself in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag must
+precede the first jax init, which importing this module already did).
+
   PYTHONPATH=src python -m benchmarks.bench_scalability --nodes 4,8,16,32,64
   PYTHONPATH=src python -m benchmarks.bench_scalability --nodes "" \
       --scenarios node,intra,bcube,pod --scenario-nodes 256
+  PYTHONPATH=src python -m benchmarks.bench_scalability --nodes "" \
+      --partition-nodes 256,512,1024
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import numpy as np
@@ -28,6 +44,12 @@ from repro.core.admm import ADMMConfig, HeterogeneousADMM
 from repro.core.consensus import simulate_consensus, time_to_error
 
 from .common import ba_topo, edge_b_min
+
+#: Newton–Schulz sign iterations for the tracked large-n rows: the parity
+#: tests bound the projection error at 16 iterations well below the support
+#: decision the pipeline consumes; 30 (the engine default) doubles the
+#: matmul cost without moving the rounded support on these instances.
+PARTITION_PSD_ITERS = 16
 
 
 def run(nodes: list[int], iters: int, sa_iters: int, seed: int,
@@ -150,6 +172,146 @@ def run_scenarios(scenarios: list[str], n_target: int, admm_iters: int,
     return rows
 
 
+def _partition_warm_start(n: int, r: int, seed: int):
+    """(g0, lam0) structured warm start — greedy balanced-degree graph with
+    Metropolis weights (SA is host-side O(iters·n³), not measured here)."""
+    from repro.core.api import _homo_degree_targets, _pack_warm
+    from repro.core.anneal import greedy_degree_graph
+
+    rng = np.random.default_rng(seed)
+    edges0 = greedy_degree_graph(n, _homo_degree_targets(n, r), rng, None)
+    g0, _, lam0 = _pack_warm(n, edges0)
+    return g0, lam0
+
+
+def _candidate_r_asym(n: int, res, r: int) -> float:
+    """ρ_asym of the rounded candidate a solve produces: top-r support →
+    Metropolis weights → Lanczos spectral gap (no polish — the drift metric
+    compares SOLVER outputs, and polish would mask small support flips)."""
+    from repro.core.api import extract_support
+    from repro.core.graph import Topology, all_edges, is_connected
+    from repro.core.weights import metropolis_weights
+
+    sel = extract_support(n, np.asarray(res.g) + np.asarray(res.g_raw), r,
+                          tol=1e-6)
+    edges_full = all_edges(n)
+    edges = [edges_full[l] for l in np.nonzero(sel)[0]]
+    if not edges or not is_connected(n, edges):
+        return 1.0
+    return float(Topology(n, edges, metropolis_weights(n, edges)).r_asym())
+
+
+def run_partition_compare(nodes: list[int], admm_iters: int, seed: int,
+                          ndev: int) -> list[dict]:
+    """Single-device vs edge-sharded solves of one homogeneous instance per n.
+
+    Three solve rows per n — (partition, psd_backend) ∈ {(none, eigh),
+    (none, newton_schulz), (edges, newton_schulz)} on the fp32 inexact-CG
+    stack — plus a compare row carrying ``ns_vs_eigh`` (the measured eigh↔NS
+    crossover backing ``engine.NS_MIN_N``), ``speedup_sharded`` (sharded vs
+    the best single-device row; ≈ 1/ndev · ideal on a single physical core,
+    see DESIGN.md §13), and the ``r_asym`` drift of the rounded candidates.
+    ``eps=0`` pins the iteration count so ms_per_iter is load-comparable.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import (ADMMConfig, init_state, make_homo_spec,
+                                   solve_spec)
+    from repro.core.shard import solve_spec_sharded
+
+    assert jax.device_count() >= ndev, (jax.device_count(), ndev)
+    rows = []
+    for n in nodes:
+        r = 2 * n
+        t0 = time.time()
+        g0, lam0 = _partition_warm_start(n, r, seed)
+        t_warm = time.time() - t0
+
+        def solve_with(psd_backend: str, sharded: bool) -> dict:
+            cfg = ADMMConfig(max_iters=admm_iters,
+                             check_every=min(10, admm_iters), eps=0.0,
+                             cg_inexact=True, dtype="float32",
+                             psd_backend=psd_backend,
+                             psd_iters=PARTITION_PSD_ITERS)
+            spec = make_homo_spec(n, r, cfg)
+            st = init_state(spec, jnp.asarray(g0), lam0)
+            if sharded:
+                def run():
+                    return solve_spec_sharded(spec, st, cfg, ndev=ndev)
+            else:
+                def run():
+                    return solve_spec(spec, st, cfg)
+            t0 = time.time()
+            res = run()  # compile + run
+            t_first = time.time() - t0
+            t0 = time.time()
+            res = run()
+            t_solve = time.time() - t0
+            return {
+                "bench": "scalability", "mode": "solve", "n": n, "r": r,
+                "partition": "edges" if sharded else "none",
+                "devices": ndev if sharded else 1,
+                "psd_backend": psd_backend, "dtype": "float32",
+                "cg_inexact": True, "psd_iters": PARTITION_PSD_ITERS,
+                "warm_start_s": round(t_warm, 2),
+                "compile_s": round(max(t_first - t_solve, 0.0), 2),
+                "solve_s": round(t_solve, 2),
+                "ms_per_iter": round(t_solve / max(res.iters, 1) * 1e3, 1),
+                "admm_iters": res.iters,
+                "cg_per_step": round(res.cg_iters / max(res.iters, 1), 1),
+                "residual": float(res.residual),
+                "r_asym": round(_candidate_r_asym(n, res, r), 6),
+            }
+
+        single_eigh = solve_with("eigh", sharded=False)
+        single_ns = solve_with("newton_schulz", sharded=False)
+        sharded_ns = solve_with("newton_schulz", sharded=True)
+        best_single = min(single_eigh, single_ns, key=lambda d: d["solve_s"])
+        compare = {
+            "bench": "scalability", "mode": "compare", "n": n, "r": r,
+            "devices": ndev, "dtype": "float32",
+            "single_ms_per_iter": best_single["ms_per_iter"],
+            "sharded_ms_per_iter": sharded_ns["ms_per_iter"],
+            "speedup_sharded": round(
+                best_single["solve_s"] / sharded_ns["solve_s"], 3),
+            "ns_vs_eigh": round(
+                single_eigh["solve_s"] / single_ns["solve_s"], 3),
+            "r_asym_drift": round(
+                abs(best_single["r_asym"] - sharded_ns["r_asym"]), 6),
+        }
+        rows += [single_eigh, single_ns, sharded_ns, compare]
+        for row in rows[-4:]:
+            print("  " + json.dumps(row))
+    return rows
+
+
+def _partition_compare_subprocess(nodes: list[int], admm_iters: int,
+                                  seed: int, ndev: int) -> list[dict]:
+    """Re-exec this benchmark with N simulated host devices.
+
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` only takes effect
+    before the first jax initialization, which importing this module already
+    triggered — so the multi-device run needs a fresh interpreter.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "partition.json")
+        cmd = [sys.executable, "-m", "benchmarks.bench_scalability",
+               "--nodes", "", "--partition-nodes",
+               ",".join(str(n) for n in nodes),
+               "--partition-iters", str(admm_iters),
+               "--partition-devices", str(ndev),
+               "--seed", str(seed), "--json-out", out]
+        subprocess.run(cmd, check=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+        with open(out) as f:
+            return json.load(f)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nodes", default="4,8,16,32,64")
@@ -163,6 +325,13 @@ def main(argv=None) -> None:
     ap.add_argument("--scenario-nodes", type=int, default=256)
     ap.add_argument("--admm-iters", type=int, default=40,
                     help="ADMM iterations for the --scenarios solves")
+    ap.add_argument("--partition-nodes", default="",
+                    help="comma-separated node counts for the sharded-ADMM "
+                         "compare (e.g. 256,512,1024); spawns an "
+                         "8-simulated-device subprocess when needed")
+    ap.add_argument("--partition-iters", type=int, default=20,
+                    help="ADMM iterations for the --partition-nodes solves")
+    ap.add_argument("--partition-devices", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
@@ -182,6 +351,21 @@ def main(argv=None) -> None:
               "(scan driver, fast solver stack) ==")
         rows += run_scenarios([s for s in args.scenarios.split(",") if s],
                               args.scenario_nodes, args.admm_iters, args.seed)
+
+    if args.partition_nodes:
+        pnodes = [int(x) for x in args.partition_nodes.split(",") if x]
+        ndev = args.partition_devices
+        import jax
+
+        if jax.device_count() >= ndev:
+            print(f"== sharded-ADMM partition compare ({ndev} devices) ==")
+            rows += run_partition_compare(pnodes, args.partition_iters,
+                                          args.seed, ndev)
+        else:
+            print(f"== sharded-ADMM partition compare "
+                  f"(subprocess, {ndev} simulated devices) ==")
+            rows += _partition_compare_subprocess(pnodes, args.partition_iters,
+                                                  args.seed, ndev)
 
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -34,7 +34,8 @@ import sys
 ID_FIELDS = ("bench", "n", "r", "solver", "driver", "timing", "scenario",
              "engine", "pipeline", "psd_backend", "dtype", "precond",
              "cg_inexact", "restarts", "epochs", "train_epochs", "dim",
-             "runs", "iters", "topologies", "compressor", "mode")
+             "runs", "iters", "topologies", "compressor", "mode",
+             "partition", "devices")
 
 #: Metric → direction. "time" = lower is better, wide band (machine speed);
 #: "ratio" = higher is better, tight band (machine-relative speedups);
@@ -49,6 +50,7 @@ METRICS = {
     "speedup_vs_exact": "ratio", "speedup": "ratio", "warm_speedup": "ratio",
     "train_speedup": "ratio", "total_speedup": "ratio",
     "consensus_speedup": "ratio",
+    "speedup_sharded": "ratio", "ns_vs_eigh": "ratio",
     "r_asym_drift": "drift", "max_final_acc_drift": "drift",
     "max_rel_curve_drift": "drift",
 }
@@ -104,12 +106,40 @@ def main(argv=None) -> int:
     ap.add_argument("--tol-ratio", type=float, default=2.0,
                     help="speedup/drift band: speedups ≥ base / tol, "
                          "drifts ≤ base × tol (machine-relative)")
+    ap.add_argument("--only-bench", default=None,
+                    help="comma-separated bench names: gate ONLY baseline "
+                         "rows whose 'bench' field is in this set (used by "
+                         "the dedicated sharded-smoke CI step)")
+    ap.add_argument("--skip-bench", default=None,
+                    help="comma-separated bench names to EXCLUDE from the "
+                         "gate (the main CI gate skips 'scalability' — its "
+                         "rows come from a separate multi-device step, not "
+                         "from `run --json`)")
+    ap.add_argument("--max-n", type=int, default=None,
+                    help="ignore baseline rows with n larger than this "
+                         "(CI smoke runs the small-n subset of a bench)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
+
+    only = set(args.only_bench.split(",")) if args.only_bench else None
+    skip = set(args.skip_bench.split(",")) if args.skip_bench else set()
+
+    def gated(row: dict) -> bool:
+        b = row.get("bench")
+        if only is not None and b not in only:
+            return False
+        if b in skip:
+            return False
+        if args.max_n is not None and isinstance(row.get("n"), int) \
+                and row["n"] > args.max_n:
+            return False
+        return True
+
+    baseline = [r for r in baseline if gated(r)]
 
     fresh_by_key = {row_key(r): r for r in fresh}
     failures, checked = [], 0
@@ -124,7 +154,8 @@ def main(argv=None) -> int:
         for p in check_row(brow, frow, args.tol_time, args.tol_ratio):
             failures.append(f"[{label}] {p}")
     base_keys = {row_key(r) for r in baseline}
-    new = [row_key(r) for r in fresh if row_key(r) not in base_keys]
+    new = [row_key(r) for r in fresh
+           if gated(r) and row_key(r) not in base_keys]
     for key in new:
         print("  new (unbaselined) row: "
               + ", ".join(f"{k}={v}" for k, v in key))

@@ -33,6 +33,12 @@ def main(argv=None) -> None:
                          "dtype, ms_per_iter, cg_per_step, r_asym, phase "
                          "timings, train_speedup, …) to this path — the perf "
                          "trajectory file committed across PRs")
+    ap.add_argument("--sharded", action="store_true",
+                    help="with --json: also run the multi-device sharded-ADMM "
+                         "partition compare at n=256/512/1024 (spawns an "
+                         "8-simulated-device subprocess; slow — used when "
+                         "refreshing the committed baseline, while CI gates "
+                         "a dedicated n=512 smoke subset)")
     args = ap.parse_args(argv)
     os.makedirs(ART, exist_ok=True)
     quick = not args.full
@@ -73,6 +79,12 @@ def main(argv=None) -> None:
                        if r.get("bench") == "dynamic"]
                     + [r for r in _json.load(open(f"{td}/compression.json"))
                        if r.get("bench") == "compression"])
+            if args.sharded:
+                from . import bench_scalability
+                bench_scalability.main(
+                    ["--nodes", "", "--partition-nodes", "256,512,1024",
+                     "--json-out", f"{td}/sharded.json"])
+                rows += _json.load(open(f"{td}/sharded.json"))
         with open(args.json, "w") as f:
             _json.dump(rows, f, indent=1)
         print("tracked ADMM + pipeline + training + dynamic + compression "

@@ -1,8 +1,9 @@
 """BA-Topo core: the paper's contribution as a composable library."""
 from .admm import ADMMConfig, ADMMResult, HeterogeneousADMM, HomogeneousADMM
 from .allocation import AllocationResult, allocate_edge_capacity
-from .api import BATopoConfig, optimize_topology, sweep_topologies
-from .engine import ADMMState, ProblemSpec
+from .api import BATopoConfig, large_n_admm_config, optimize_topology, sweep_topologies
+from .engine import ADMMState, ProblemSpec, resolve_psd_backend
+from .shard import resolve_partition
 from .bandwidth import PaperConstants, homo_edge_bandwidth, min_edge_bandwidth, node_hetero_edge_bandwidth, t_epoch, t_iter
 from .constraints import ConstraintSet, bcube_constraints, intra_server_constraints, node_level_constraints, pod_boundary_constraints
 from .graph import Topology, all_edges, aspl, incidence_matrix, is_connected, laplacian_from_weights, r_asym, r_asym_fast, weight_matrix_from_weights
@@ -14,7 +15,8 @@ __all__ = [
     "ADMMConfig", "ADMMResult", "HeterogeneousADMM", "HomogeneousADMM",
     "ADMMState", "ProblemSpec",
     "AllocationResult", "allocate_edge_capacity",
-    "BATopoConfig", "optimize_topology", "sweep_topologies",
+    "BATopoConfig", "large_n_admm_config", "optimize_topology",
+    "sweep_topologies", "resolve_psd_backend", "resolve_partition",
     "PaperConstants", "homo_edge_bandwidth", "min_edge_bandwidth",
     "node_hetero_edge_bandwidth", "t_epoch", "t_iter",
     "ConstraintSet", "bcube_constraints", "intra_server_constraints",

@@ -83,7 +83,29 @@ class _ADMMBase:
             return solve_python(self.spec, state, cfg, step_fn=self._ilu_step())
         if cfg.driver == "python":
             return solve_python(self.spec, state, cfg)
+        from .shard import resolve_partition, solve_spec_sharded
+
+        # a single solve has no instance batch — "instances" degenerates
+        if resolve_partition(cfg.partition, self.spec.n) == "edges":
+            return solve_spec_sharded(self.spec, state, cfg)
         return solve_spec(self.spec, state, cfg)
+
+    def _solve_states_batched(self, states: ADMMState,
+                              batch: int) -> list[ADMMResult]:
+        cfg = self._batched_cfg()
+        from .shard import (
+            resolve_partition, solve_batched_spec_sharded, solve_spec_sharded)
+
+        part = resolve_partition(cfg.partition, self.spec.n, batch=batch)
+        if part == "instances":
+            return solve_batched_spec_sharded(self.spec, states, cfg)
+        if part == "edges":
+            import jax
+
+            return [solve_spec_sharded(
+                self.spec, jax.tree.map(lambda a, b=b: a[b], states), cfg)
+                for b in range(batch)]
+        return solve_batched_spec(self.spec, states, cfg)
 
     def _batched_cfg(self) -> ADMMConfig:
         """Validated config for solve_batched (always the scan driver)."""
@@ -121,11 +143,11 @@ class HomogeneousADMM(_ADMMBase):
         """
         import jax
 
-        cfg = self._batched_cfg()
+        self._batched_cfg()
         g0s = jnp.asarray(g0s, dtype=jnp.float64)
         lam0s = jnp.asarray(lam0s, dtype=jnp.float64)
         states = jax.vmap(lambda g, l: init_state(self.spec, g, l))(g0s, lam0s)
-        return solve_batched_spec(self.spec, states, cfg)
+        return self._solve_states_batched(states, int(g0s.shape[0]))
 
     def _ilu_step(self):
         if self._ilu_step_fn is None:
@@ -159,10 +181,10 @@ class HeterogeneousADMM(_ADMMBase):
         """Batched restarts: (B, m) g0s, (B, m) z0s, (B,) lam0s."""
         import jax
 
-        cfg = self._batched_cfg()
+        self._batched_cfg()
         g0s = jnp.asarray(g0s, dtype=jnp.float64)
         z0s = jnp.asarray(z0s, dtype=jnp.float64)
         lam0s = jnp.asarray(lam0s, dtype=jnp.float64)
         states = jax.vmap(lambda g, z, l: init_state(self.spec, g, l, z=z))(
             g0s, z0s, lam0s)
-        return solve_batched_spec(self.spec, states, cfg)
+        return self._solve_states_batched(states, int(g0s.shape[0]))

@@ -43,11 +43,11 @@ from .graph import Topology, all_edges, edge_index, is_connected, r_asym, weight
 from .weights import metropolis_weights, polish_weights, polish_weights_batched
 
 __all__ = ["BATopoConfig", "optimize_topology", "sweep_topologies",
-           "extract_support", "repair_selection"]
+           "extract_support", "repair_selection", "large_n_admm_config"]
 
 
 def _pipeline_admm_default() -> ADMMConfig:
-    """Pipeline-default ADMM stack (DESIGN.md §10): the PR-2 measured-fast
+    """Pipeline-default ADMM stack (DESIGN.md §10/§13): the PR-2 measured-fast
     solver options (inexact CG tied to the primal residual, fp32 loop with
     fp64 residuals) plus a 600-iteration budget. The pipeline consumes only
     the solver's *support decision* — weights are re-derived by the convex
@@ -55,9 +55,29 @@ def _pipeline_admm_default() -> ADMMConfig:
     and that decision saturates long before the eps-residual does: measured
     drift vs the exact 1500-iteration solve is 0.0 on every paper scenario
     at n≤32 and ≤7e-4 at n=64/4 restarts (committed bench_pipeline rows).
-    Direct ``HomogeneousADMM``/``HeterogeneousADMM`` use keeps the exact
-    paper-faithful ``ADMMConfig()`` defaults."""
-    return ADMMConfig(max_iters=600, cg_inexact=True, dtype="float32")
+    ``psd_backend``/``partition`` are the "auto" selectors: on a
+    single-device CPU they resolve to the previous eigh/unsharded behavior;
+    on multi-device or accelerator backends they engage the measured large-n
+    stack (core.shard, engine.NS_MIN_N). Direct ``HomogeneousADMM``/
+    ``HeterogeneousADMM`` use keeps the exact paper-faithful
+    ``ADMMConfig()`` defaults."""
+    return ADMMConfig(max_iters=600, cg_inexact=True, dtype="float32",
+                      psd_backend="auto", partition="auto")
+
+
+def large_n_admm_config(max_iters: int = 600) -> ADMMConfig:
+    """The measured large-n solver stack (DESIGN.md §13), as an explicit
+    factory for direct solver use and benchmarks: fp32 loop with fp64
+    residuals, inexact CG tied to the primal residual, platform/size-resolved
+    PSD backend (``engine.resolve_psd_backend``) and device layout
+    (``shard.resolve_partition``). The spectral-evaluation side pairs with
+    it automatically: ``Topology.r_asym`` routes through the Lanczos
+    ``r_asym_fast`` above ``graph.FAST_SPECTRAL_MIN_N`` (= 192, measured in
+    PR 3). This equals the pipeline default stack — named so callers and
+    benches can request it without relying on the pipeline default staying
+    identical."""
+    return ADMMConfig(max_iters=max_iters, cg_inexact=True, dtype="float32",
+                      psd_backend="auto", partition="auto")
 
 
 @dataclass
@@ -506,7 +526,20 @@ def sweep_topologies(
                  for e in _anneal_edges(n, inits, seeds, None, cfg)]
         states = [init_state(spec, jnp.asarray(g0), lam0) for g0, _, lam0 in warms]
         batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-        results = solve_sweep_spec(spec, np.asarray(rs_n), batched, cfg.admm)
+        from .shard import (
+            resolve_partition, solve_spec_sharded, solve_sweep_spec_sharded)
+
+        part = resolve_partition(cfg.admm.partition, n, batch=len(rs_n))
+        if part == "instances":
+            results = solve_sweep_spec_sharded(
+                spec, np.asarray(rs_n), batched, cfg.admm)
+        elif part == "edges":
+            results = [solve_spec_sharded(
+                spec.replace(r=jnp.asarray(rn, dtype=jnp.int64)),
+                jax.tree.map(lambda a, k=k: a[k], batched), cfg.admm,
+                r_cap=max(rs_n)) for k, rn in enumerate(rs_n)]
+        else:
+            results = solve_sweep_spec(spec, np.asarray(rs_n), batched, cfg.admm)
         for (r_req, r, (g0, z0, lam0), res) in zip(rs_req, rs_n, warms, results):
             meta = {"scenario": "homo", "r": r}
             sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)

@@ -56,7 +56,7 @@ __all__ = [
     "make_homo_spec", "make_hetero_spec", "init_state", "step",
     "solve_spec", "solve_python", "solve_batched_spec", "solve_sweep_spec",
     "proj_psd", "proj_psd_ns", "proj_card_nonneg", "proj_binary_topr",
-    "jacobi_diag", "build_sparse_A",
+    "jacobi_diag", "build_sparse_A", "resolve_psd_backend",
 ]
 
 # Inexact-ADMM CG tolerance schedule (DESIGN.md §9): relative tolerance
@@ -67,6 +67,24 @@ INEXACT_CAP = 1e-3
 # Relative CG tolerances below ~machine-ε are unreachable in fp32 and only
 # burn ``cg_maxiter`` iterations per step; floor the request there.
 FP32_TOL_FLOOR = 1e-6
+
+# Measured eigh ↔ Newton–Schulz crossover for ``psd_backend="auto"``
+# (benchmarks/bench_scalability.py --psd-crossover; table in DESIGN.md §13).
+# On XLA:CPU the LAPACK eigh stays *faster* than the matmul-only NS-16
+# iteration at every n ≤ 1024 (203 ms vs 848 ms at n=1024) — NS pays off
+# only where matmul throughput towers over eigh, i.e. accelerators with
+# matrix units (None = never switch on this platform).
+NS_MIN_N = {"cpu": None, "default": 256}
+
+
+def resolve_psd_backend(psd_backend: str, n: int,
+                        platform: str | None = None) -> str:
+    """Resolve ``psd_backend="auto"`` to a concrete backend for size n."""
+    if psd_backend != "auto":
+        return psd_backend
+    platform = platform or jax.default_backend()
+    thr = NS_MIN_N.get(platform, NS_MIN_N["default"])
+    return "newton_schulz" if (thr is not None and n >= thr) else "eigh"
 
 
 @dataclass
@@ -89,9 +107,12 @@ class ADMMConfig:
     precond: str = "none"         # jacobi | none — Schur-complement CG preconditioner
     cg_inexact: bool = False      # adaptive CG tolerance tied to the primal residual
     psd_backend: str = "eigh"     # eigh (exact) | newton_schulz (matmul-only)
+    #                             # | auto (platform/size crossover, NS_MIN_N)
     psd_iters: int = 30           # Newton–Schulz sign iterations
     dtype: str = "float64"        # float64 | float32 (fp32 loop, fp64 residuals)
     edge_kernel: bool = False     # route L(g)/quadform through the Pallas pair
+    # -- multi-device layout (core.shard, DESIGN.md §13) --------------------
+    partition: str = "none"       # none | edges | instances | auto
 
 
 @dataclass
@@ -229,11 +250,14 @@ def _validate_cfg(cfg: ADMMConfig) -> None:
     ``precond="Jacobi"`` would benchmark the wrong configuration)."""
     if cfg.precond not in ("jacobi", "none"):
         raise ValueError(f"unknown precond {cfg.precond!r}; expected 'jacobi' or 'none'")
-    if cfg.psd_backend not in ("eigh", "newton_schulz"):
+    if cfg.psd_backend not in ("eigh", "newton_schulz", "auto"):
         raise ValueError(f"unknown psd_backend {cfg.psd_backend!r}; "
-                         "expected 'eigh' or 'newton_schulz'")
+                         "expected 'eigh', 'newton_schulz' or 'auto'")
     if cfg.dtype not in ("float64", "float32"):
         raise ValueError(f"unknown dtype {cfg.dtype!r}; expected 'float64' or 'float32'")
+    if cfg.partition not in ("none", "edges", "instances", "auto"):
+        raise ValueError(f"unknown partition {cfg.partition!r}; expected "
+                         "'none', 'edges', 'instances' or 'auto'")
 
 
 def make_homo_spec(n: int, r: int, cfg: ADMMConfig,
@@ -257,7 +281,8 @@ def make_homo_spec(n: int, r: int, cfg: ADMMConfig,
         M=None, e_cap=None,
         jd=jacobi_diag(n, ei, ej, dt) if cfg.precond == "jacobi" else None,
         lidx=_packed_edge_index(n),
-        dtype=cfg.dtype, psd_backend=cfg.psd_backend, psd_iters=cfg.psd_iters,
+        dtype=cfg.dtype, psd_backend=resolve_psd_backend(cfg.psd_backend, n),
+        psd_iters=cfg.psd_iters,
         cg_inexact=cfg.cg_inexact, edge_kernel=cfg.edge_kernel,
     )
 
@@ -287,7 +312,8 @@ def make_hetero_spec(n: int, r: int, M: np.ndarray, e_cap: np.ndarray,
         jd=(jacobi_diag(n, ei, ej, dt, M=M, equality=equality)
             if cfg.precond == "jacobi" else None),
         lidx=_packed_edge_index(n),
-        dtype=cfg.dtype, psd_backend=cfg.psd_backend, psd_iters=cfg.psd_iters,
+        dtype=cfg.dtype, psd_backend=resolve_psd_backend(cfg.psd_backend, n),
+        psd_iters=cfg.psd_iters,
         cg_inexact=cfg.cg_inexact, edge_kernel=cfg.edge_kernel,
     )
 

@@ -37,6 +37,17 @@ def edge_laplacian(g, ei, ej, n: int, *, use_kernel: bool = True,
     return L[:n, :n]
 
 
+def edge_laplacian_window(g_loc, lidx, offset):
+    """Per-device additive Laplacian contribution of one packed-edge window
+    (see ``ref.edge_laplacian_window``). Pure gather — no Pallas variant:
+    the 2-D kernel derives the packed index analytically, which requires
+    the complete lexicographic edge list, while the window form is what the
+    edge-partitioned ADMM (``core.shard``) runs per device before the
+    cross-device ``psum``. Not jit-wrapped: it is always called inside an
+    already-traced ``shard_map``/``jit`` region."""
+    return ref.edge_laplacian_window(g_loc, lidx, offset)
+
+
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
 def edge_quadform(P, ei, ej, *, use_kernel: bool = True,
                   interpret: bool = True):

@@ -16,3 +16,21 @@ def edge_laplacian(g, ei, ej, n: int):
 def edge_quadform(P, ei, ej):
     """⟨∂L/∂g_l, P⟩ = P_ii + P_jj − P_ij − P_ji per edge l = {i, j}."""
     return P[ei, ei] + P[ej, ej] - P[ei, ej] - P[ej, ei]
+
+
+def edge_laplacian_window(g_loc, lidx, offset):
+    """Additive Laplacian contribution of one packed-edge window.
+
+    The edge-partitioned ADMM layer (``core.shard``) gives each device a
+    contiguous block ``[offset, offset + m_loc)`` of the packed edge-weight
+    vector. Remapping the global packed-index map ``lidx`` into the window
+    (out-of-window entries hit the appended zero slot, like the diagonal
+    does in the full-vector gather) assembles that device's additive
+    contribution to L(g); a ``psum`` over the mesh axis completes it.
+    """
+    m_loc = g_loc.shape[0]
+    idx = lidx - offset
+    valid = (idx >= 0) & (idx < m_loc)
+    g_ext = jnp.concatenate([g_loc, jnp.zeros(1, dtype=g_loc.dtype)])
+    G = g_ext[jnp.where(valid, idx, m_loc)]
+    return jnp.diag(jnp.sum(G, axis=1)) - G

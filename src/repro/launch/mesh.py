@@ -14,6 +14,8 @@ the paper's inter-server switch tier (core.constraints.pod_boundary_constraints)
 """
 from __future__ import annotations
 
+import math
+
 import jax
 
 __all__ = ["make_production_mesh", "make_host_mesh", "POD_SHAPE", "MULTIPOD_SHAPE"]
@@ -22,14 +24,30 @@ POD_SHAPE = (16, 16)
 MULTIPOD_SHAPE = (2, 16, 16)
 
 
+def _check_devices(shape: tuple[int, ...], axes: tuple[str, ...]) -> None:
+    """Fail early with an actionable message when the requested mesh does not
+    fit the attached devices — XLA's own mesh-construction error on a
+    CPU-only box is an opaque reshape failure with no hint about why."""
+    need = math.prod(shape)
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {need} devices but only "
+            f"{have} are attached ({jax.default_backend()} backend). On a "
+            "CPU-only environment, simulate host devices by setting "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "BEFORE the first jax import (e.g. in a subprocess, as "
+            "tests/test_sharded_runtime.py does).")
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    _check_devices(shape, axes)
     return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (CPU tests / examples)."""
-    ndev = len(jax.devices())
-    assert data * model <= ndev, (data, model, ndev)
+    _check_devices((data, model), ("data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
