@@ -1,0 +1,291 @@
+"""Beyond-paper: chaos scenarios — static incumbent vs warm-started online
+re-optimization under churn, packet loss, stragglers and bandwidth drift.
+
+One tracked scenario (node-hetero n=16): the fleet trains on a BA-Topo
+optimized for the §VI-A2 bandwidth profile; mid-run the fast nodes' NICs
+degrade (B(t) drops), a node churns out and rejoins, links drop packets and
+stragglers stretch steps. Two runs enter ONE vmapped chaos-engine dispatch:
+
+  static:  the incumbent topology rides out the drift unchanged;
+  reopt:   a ``DriftDetector`` (core.reopt) fires at the drift step, the
+           ADMM re-solves warm-started from the incumbent support under the
+           drifted bandwidths, and the new graph activates after a modeled
+           decision→activation lag (``--reopt-lag-ms``, deterministic so CI
+           rows are machine-comparable; the *measured* wall time of the
+           re-solve is reported separately as ``time_to_reopt_s``).
+
+Both runs pay the Eq. 34/35 clock extended with straggler delays and
+effective B(t) (``common.chaos_step_times``); the tracked headline is
+``reopt_gain`` = static time-to-accuracy / re-optimized time-to-accuracy.
+``--engine both`` adds the scan-vs-host parity compare row (chaos train +
+consensus oracles) gated by ``check_regression``.
+
+  PYTHONPATH=src python -m benchmarks.bench_chaos
+  PYTHONPATH=src python -m benchmarks.bench_chaos --engine both --json-out rows.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import BATopoConfig
+from repro.core.reopt import DriftDetector, DriftPolicy, reoptimize_topology
+from repro.data import class_balanced_partition, make_classification_data
+from repro.dsgd.chaos import make_chaos
+from repro.dsgd.dynamic import static_cycle
+from repro.dsgd.sim import (
+    CommSpec,
+    DSGDSimConfig,
+    accuracy_curve_host_chaos,
+    consensus_curve_host_chaos,
+    consensus_curves_chaos,
+    train_curves_chaos,
+)
+
+from .common import NODE_BW_16, ba_topo, chaos_step_times
+
+DENSE = CommSpec()
+
+
+def drift_profile(steps: int, n: int, drift_step: int, bw0: np.ndarray,
+                  slow_nodes: int, slow_bw: float) -> np.ndarray:
+    """(T, n) bandwidth profile: bw0 until ``drift_step``, then the first
+    ``slow_nodes`` nodes collapse to ``slow_bw`` GB/s for good."""
+    prof = np.broadcast_to(bw0, (steps, n)).copy()
+    prof[drift_step:, :slow_nodes] = slow_bw
+    return prof
+
+
+def build_chaos(steps: int, n: int, drift_step: int, bw0: np.ndarray,
+                args) -> "object":
+    churn = []
+    if args.churn_node >= 0:
+        t1 = min(drift_step + max(steps // 6, 2), steps)
+        churn = [(args.churn_node, drift_step, t1)]
+    prof = drift_profile(steps, n, drift_step, bw0,
+                         args.slow_nodes, args.slow_bw)
+    return make_chaos(steps, n, seed=args.seed, churn=churn,
+                      p_drop=args.p_drop, straggler_prob=args.straggler_prob,
+                      straggler_mult=args.straggler_mult, bandwidth=prof)
+
+
+def piecewise_cycle(W_before: np.ndarray, W_after: np.ndarray, steps: int,
+                    t_switch: int) -> np.ndarray:
+    """(T, n, n) cycle tensor switching topologies at ``t_switch`` — with
+    R = T the scan's ``t mod R`` gather makes the cycle a per-step script."""
+    cyc = np.empty((steps,) + W_before.shape)
+    cyc[:t_switch] = W_before
+    cyc[t_switch:] = W_after
+    return cyc
+
+
+def run_reopt(incumbent, chaos, cfg):
+    """Detector walk + warm-started re-solve. Returns (reopt_result, t_detect)."""
+    det = DriftDetector.from_profile(chaos.bandwidth[0], chaos.alive[0],
+                                     DriftPolicy(cooldown_steps=chaos.steps))
+    t_detect = None
+    for t in range(1, chaos.steps):
+        if det.check(t, chaos.bandwidth[t], chaos.alive[t]) is not None:
+            t_detect = t
+            break
+    if t_detect is None:                       # no drift → nothing to re-solve
+        return None, None
+    res = reoptimize_topology(incumbent, scenario="node",
+                              node_bandwidths=chaos.bandwidth[t_detect],
+                              alive=chaos.alive[t_detect], cfg=cfg)
+    return res, t_detect
+
+
+def _t_target(acc: np.ndarray, step_ms: np.ndarray, iters: int,
+              target: float) -> float:
+    """Modeled seconds until epoch-boundary accuracy reaches the target."""
+    cum = np.cumsum(step_ms)
+    hit = np.nonzero(acc >= target)[0]
+    if not hit.size:
+        return float("inf")
+    return float(cum[(int(hit[0]) + 1) * iters - 1] / 1e3)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--r", type=int, default=32)
+    ap.add_argument("--train-epochs", type=int, default=6)
+    ap.add_argument("--target-acc", type=float, default=0.8)
+    ap.add_argument("--consensus-iters", type=int, default=120)
+    ap.add_argument("--drift-frac", type=float, default=0.25,
+                    help="drift step as a fraction of the total step count")
+    ap.add_argument("--slow-nodes", type=int, default=4,
+                    help="nodes whose bandwidth collapses at the drift step")
+    ap.add_argument("--slow-bw", type=float, default=1.0)
+    ap.add_argument("--churn-node", type=int, default=5,
+                    help="node that churns out at the drift step (-1: none)")
+    ap.add_argument("--p-drop", type=float, default=0.03)
+    ap.add_argument("--straggler-prob", type=float, default=0.05)
+    ap.add_argument("--straggler-mult", type=float, default=3.0)
+    ap.add_argument("--reopt-lag-ms", type=float, default=500.0,
+                    help="modeled drift-detection→activation lag (fixed so "
+                         "tracked rows are machine-comparable)")
+    ap.add_argument("--sa-iters", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "host", "both"])
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    n = args.n
+    bw0 = NODE_BW_16[:n]
+    cfg = BATopoConfig(seed=args.seed, sa_iters=args.sa_iters)
+    print(f"== chaos: static incumbent vs online re-optimization, "
+          f"node-hetero n={n} r={args.r} (engine={args.engine}) ==")
+
+    t0 = time.time()
+    incumbent = ba_topo(n, args.r, "node", node_bw=bw0, seed=args.seed,
+                        sa_iters=args.sa_iters)
+    topo_s = round(time.time() - t0, 3)
+
+    X, y = make_classification_data(num_classes=10, dim=64,
+                                    samples_per_class=400, seed=args.seed)
+    Xte, yte = make_classification_data(num_classes=10, dim=64,
+                                        samples_per_class=64, seed=args.seed,
+                                        noise_seed=args.seed + 10_001)
+    parts = class_balanced_partition(y, n, seed=args.seed)
+    scfg = DSGDSimConfig(epochs=args.train_epochs, batch=32, lr=0.05,
+                         momentum=0.9, seed=args.seed)
+    iters = min(len(p) for p in parts) // scfg.batch
+    steps = args.train_epochs * iters
+    drift_step = max(int(steps * args.drift_frac), 1)
+    chaos = build_chaos(steps, n, drift_step, bw0, args)
+
+    # -- drift detection + warm-started re-solve (measured wall time) -------
+    reopt, t_detect = run_reopt(incumbent, chaos, cfg)
+    if reopt is None:
+        raise SystemExit("no drift detected — scenario misconfigured")
+    lag_steps = max(int(np.ceil(
+        args.reopt_lag_ms / chaos_step_times(incumbent, chaos,
+                                             start=t_detect,
+                                             stop=t_detect + 1)[0])), 1)
+    t_act = min(t_detect + lag_steps, steps)
+    new_topo = reopt.topology
+    print(f"  drift@{t_detect} (step), reopt: reoptimized={reopt.reoptimized} "
+          f"attempts={reopt.attempts} r_asym {reopt.r_asym_before:.4f} -> "
+          f"{reopt.r_asym_after:.4f}, measured time_to_reopt="
+          f"{reopt.time_to_reopt_s:.2f}s, activates@{t_act}")
+
+    runs = [
+        {"mode": "static", "cycle": static_cycle(incumbent.W),
+         "step_ms": chaos_step_times(incumbent, chaos)},
+        {"mode": "reopt",
+         "cycle": piecewise_cycle(incumbent.W, new_topo.W, steps, t_act),
+         "step_ms": np.concatenate([
+             chaos_step_times(incumbent, chaos, stop=t_act),
+             chaos_step_times(new_topo, chaos, start=t_act)])},
+    ]
+    data = (jnp.asarray(X), jnp.asarray(y), parts,
+            jnp.asarray(Xte), jnp.asarray(yte))
+
+    # consensus chaos spec (its own clock: steps = consensus iters)
+    c_iters = args.consensus_iters
+    c_drift = max(int(c_iters * args.drift_frac), 1)
+    c_chaos = build_chaos(c_iters, n, c_drift, bw0, args)
+    c_act = min(c_drift + lag_steps, c_iters)
+    c_cycles = [static_cycle(incumbent.W),
+                piecewise_cycle(incumbent.W, new_topo.W, c_iters, c_act)]
+    x0 = np.random.default_rng(args.seed).normal(size=(n, 16))
+
+    engines = ["host", "scan"] if args.engine == "both" else [args.engine]
+    all_rows: list[dict] = []
+    per_engine: dict[str, dict] = {}
+    for engine in engines:
+        Xd, yd, _, Xted, yted = data
+        t0 = time.time()
+        if engine == "scan":
+            accs, _ = train_curves_chaos([r["cycle"] for r in runs],
+                                         np.ones(len(runs)), DENSE, chaos,
+                                         Xd, yd, parts, Xted, yted, scfg)
+            accs = np.asarray(accs)
+        else:
+            accs = np.stack([accuracy_curve_host_chaos(
+                r["cycle"], 1.0, DENSE, chaos, Xd, yd, parts, Xted, yted,
+                scfg)[0] for r in runs])
+        train_s = round(time.time() - t0, 3)
+
+        t0 = time.time()
+        if engine == "scan":
+            errs = consensus_curves_chaos(c_cycles, np.ones(len(c_cycles)),
+                                          DENSE, c_chaos, x0, c_iters,
+                                          seed=args.seed)
+        else:
+            errs = np.stack([consensus_curve_host_chaos(
+                c, 1.0, DENSE, c_chaos, x0, c_iters, seed=args.seed)
+                for c in c_cycles])
+        consensus_s = round(time.time() - t0, 3)
+
+        rows = []
+        for r, a in zip(runs, accs):
+            tt = _t_target(a, r["step_ms"], iters, args.target_acc)
+            rows.append({
+                "topology": incumbent.meta.get("label", incumbent.name),
+                "mode": r["mode"], "engine": engine,
+                "final_acc": round(float(a[-1]), 4),
+                "total_modeled_s": round(float(r["step_ms"].sum() / 1e3), 2),
+                "t_target_s": round(tt, 2) if np.isfinite(tt)
+                else float("inf")})
+        t_static = rows[0]["t_target_s"]
+        t_reopt = rows[1]["t_target_s"]
+        summary = {
+            "bench": "chaos", "scenario": "node", "n": n, "engine": engine,
+            "train_epochs": args.train_epochs, "steps": steps,
+            "drift_step": t_detect, "reopt_step": t_act,
+            "reoptimized": reopt.reoptimized, "attempts": reopt.attempts,
+            "time_to_reopt_s": round(reopt.time_to_reopt_s, 3),
+            "r_asym_before": round(reopt.r_asym_before, 4),
+            "r_asym_after": round(reopt.r_asym_after, 4),
+            "static_t_target_s": t_static, "reopt_t_target_s": t_reopt,
+            "topo_s": topo_s, "train_s": train_s,
+            "consensus_s": consensus_s,
+            "total_s": round(train_s + consensus_s, 3),
+        }
+        if np.isfinite(t_static) and np.isfinite(t_reopt) and t_reopt > 0:
+            summary["reopt_gain"] = round(t_static / t_reopt, 3)
+        per_engine[engine] = {"rows": rows, "accs": accs, "errs": errs,
+                              "summary": summary}
+        all_rows += rows + [summary]
+        hdr = ["mode", "engine", "final_acc", "t_target_s", "total_modeled_s"]
+        print(f"  -- engine={engine}: train {train_s}s, "
+              f"consensus {consensus_s}s --")
+        print(" | ".join(f"{h:>16}" for h in hdr))
+        for row in rows:
+            print(" | ".join(f"{str(row.get(h)):>16}" for h in hdr))
+        keys = ["time_to_reopt_s", "static_t_target_s", "reopt_t_target_s"]
+        if "reopt_gain" in summary:
+            keys.append("reopt_gain")
+        print("  " + json.dumps({k: summary[k] for k in keys}))
+
+    if args.engine == "both":
+        h, s = per_engine["host"], per_engine["scan"]
+        e0 = h["errs"][:, :1]
+        crow = {"bench": "chaos", "scenario": "node", "n": n,
+                "engine": "scan-vs-host",
+                "speedup": round(h["summary"]["total_s"]
+                                 / max(s["summary"]["total_s"], 1e-9), 2),
+                "max_final_acc_drift": round(
+                    float(np.max(np.abs(h["accs"][:, -1]
+                                        - s["accs"][:, -1]))), 6),
+                "max_rel_curve_drift": float(
+                    f"{float(np.max(np.abs(h['errs'] - s['errs']) / e0)):.3g}")}
+        all_rows.append(crow)
+        print("  " + json.dumps(crow))
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(all_rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

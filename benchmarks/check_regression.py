@@ -51,6 +51,7 @@ METRICS = {
     "train_speedup": "ratio", "total_speedup": "ratio",
     "consensus_speedup": "ratio",
     "speedup_sharded": "ratio", "ns_vs_eigh": "ratio",
+    "reopt_gain": "ratio", "time_to_reopt_s": "time",
     "r_asym_drift": "drift", "max_final_acc_drift": "drift",
     "max_rel_curve_drift": "drift",
 }

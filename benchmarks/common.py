@@ -109,6 +109,47 @@ def scenario_topologies(n: int, scenario: str, sa_iters: int, seed: int):
     return topos, node_bw, cs
 
 
+def chaos_step_times(topo: Topology, chaos, const: PaperConstants = PC,
+                     start: int = 0, stop: int | None = None) -> np.ndarray:
+    """Per-step modeled wall time (ms) of a topology under a ChaosSpec —
+    the Eq. 34/35 clock extended with straggler delays and effective B(t).
+
+    Step t: an edge is active iff both endpoints are alive; its bandwidth is
+    the degree-shared ``min(B_i(t)/d_i, B_j(t)/d_j)`` with the *static*
+    degrees (ports are provisioned for the full graph, a neighbor's death
+    does not re-cable the node). Comm time is Eq. 34 at the min active-edge
+    bandwidth; the step then waits for the slowest *alive* participant:
+
+        step_ms(t) = (b_avail / b_min(t) × t_comm + t_comp) × max straggler.
+
+    Link drops (``chaos.link_up``) do NOT stretch the clock: a lost gossip
+    payload costs accuracy (the training-math side), not time — the step's
+    exchange window elapses either way. Returns ms for steps
+    ``start ≤ t < stop`` (default: the whole spec).
+    """
+    from repro.core.graph import degrees
+
+    stop = chaos.steps if stop is None else stop
+    n = topo.n
+    d = np.maximum(degrees(n, topo.edges).astype(np.float64), 1.0)
+    ei = np.array([i for i, _ in topo.edges], dtype=np.int64)
+    ej = np.array([j for _, j in topo.edges], dtype=np.int64)
+    out = np.empty(stop - start)
+    for k, t in enumerate(range(start, stop)):
+        alive = chaos.alive[t]
+        bw = np.asarray(chaos.bandwidth[t], dtype=np.float64)
+        comm = 0.0
+        if ei.size:
+            act = (alive[ei] > 0) & (alive[ej] > 0)
+            if act.any():
+                b_edge = np.minimum(bw[ei] / d[ei], bw[ej] / d[ej])[act]
+                comm = t_iter(float(b_edge.min()), const)
+        slow = chaos.straggler[t][alive > 0]
+        mult = float(slow.max()) if slow.size else 1.0
+        out[k] = (comm + const.t_comp_ms) * mult
+    return out
+
+
 def dynamic_step_times(topo: Topology, schedules, scenario: str,
                        node_bw: np.ndarray | None = None, cs=None,
                        const: PaperConstants = PC) -> np.ndarray:

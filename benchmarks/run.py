@@ -47,8 +47,8 @@ def main(argv=None) -> None:
         import json as _json
         import tempfile
 
-        from . import (bench_admm, bench_compression, bench_dynamic,
-                       bench_pipeline, bench_training_time)
+        from . import (bench_admm, bench_chaos, bench_compression,
+                       bench_dynamic, bench_pipeline, bench_training_time)
         # Fixed, quick configuration so rows stay comparable across PRs:
         # backend×driver grid at n=16/32 + the fast-compare row at n=64,
         # the end-to-end outer-pipeline rows (device vs host phase
@@ -71,6 +71,8 @@ def main(argv=None) -> None:
                                 "--json-out", f"{td}/dynamic.json"])
             bench_compression.main(["--engine", "both",
                                     "--json-out", f"{td}/compression.json"])
+            bench_chaos.main(["--engine", "both",
+                              "--json-out", f"{td}/chaos.json"])
             rows = (_json.load(open(f"{td}/admm.json"))
                     + _json.load(open(f"{td}/pipeline.json"))
                     + [r for r in _json.load(open(f"{td}/training.json"))
@@ -78,7 +80,9 @@ def main(argv=None) -> None:
                     + [r for r in _json.load(open(f"{td}/dynamic.json"))
                        if r.get("bench") == "dynamic"]
                     + [r for r in _json.load(open(f"{td}/compression.json"))
-                       if r.get("bench") == "compression"])
+                       if r.get("bench") == "compression"]
+                    + [r for r in _json.load(open(f"{td}/chaos.json"))
+                       if r.get("bench") == "chaos"])
             if args.sharded:
                 from . import bench_scalability
                 bench_scalability.main(
@@ -88,7 +92,7 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             _json.dump(rows, f, indent=1)
         print("tracked ADMM + pipeline + training + dynamic + compression "
-              f"perf rows written to {args.json}")
+              f"+ chaos perf rows written to {args.json}")
         return
 
     from . import (bench_admm, bench_compression, bench_consensus,
@@ -137,6 +141,10 @@ def main(argv=None) -> None:
     print("\n### bench_compression (beyond-paper: CHOCO gossip)")
     bench_compression.main(["--iters", "800" if quick else "3000",
                             "--json-out", f"{ART}/compression.json"])
+
+    print("\n### bench_chaos (beyond-paper: faults + online re-optimization)")
+    from . import bench_chaos
+    bench_chaos.main(["--json-out", f"{ART}/chaos.json"])
 
     print("\n### bench_kernels")
     bench_kernels.main(["--json-out", f"{ART}/kernels.json"])

@@ -355,7 +355,9 @@ def optimize_topology(
     meta: dict = {"scenario": scenario, "r": r}
 
     if scenario == "node":
-        assert node_bandwidths is not None
+        if node_bandwidths is None:
+            raise ValueError("scenario='node' requires node_bandwidths "
+                             "(per-node GB/s profile for Algorithm 1)")
         alloc = allocate_edge_capacity(np.asarray(node_bandwidths), r)
         from .allocation import graphical_repair
         from .constraints import node_level_constraints
@@ -366,7 +368,9 @@ def optimize_topology(
         meta["alloc_e"] = e_alloc.tolist()
         deg_targets = e_alloc
     elif scenario == "constraint":
-        assert cs is not None
+        if cs is None:
+            raise ValueError("scenario='constraint' requires a ConstraintSet "
+                             "(cs=...)")
         deg_targets = None
     else:
         deg_targets = _homo_degree_targets(n, r)
@@ -438,7 +442,12 @@ def optimize_topology(
         if best_topo is None or val < best_val:
             cand.meta["selected_from"] = src
             best_topo, best_val = cand, val
-    assert best_topo is not None, "failed to construct any connected topology"
+    if best_topo is None:
+        raise ValueError(
+            f"failed to construct any connected topology for n={n}, r={r}, "
+            f"scenario={scenario!r} — every candidate (ADMM, warm starts, "
+            "classics) was disconnected under the constraints; raise r or "
+            "relax the ConstraintSet")
     best_topo.meta["r_asym"] = best_val
     prof["eval_s"] = prof.get("eval_s", 0.0) + time.perf_counter() - t0
     return best_topo

@@ -1,0 +1,262 @@
+"""Online topology re-optimization under drift (DESIGN.md §14).
+
+The chaos layer (``repro.dsgd.chaos``) makes bandwidth and membership
+time-varying; this module closes the loop. A ``DriftDetector`` watches the
+per-step bandwidth profile B(t) and the alive mask against a baseline and
+fires when either moves past the ``DriftPolicy`` thresholds. On a trigger,
+``reoptimize_topology`` re-runs the ADMM pipeline **warm-started from the
+incumbent support** — ``g0``/``z0``/``lam0`` packed from the live topology
+exactly the way the cold pipeline packs its annealed warm starts — under
+the drifted ``ConstraintSet``, with a retry/fallback ladder:
+
+  attempt 1  warm ADMM from the incumbent support (cheap: the solve starts
+             at a feasible, near-optimal point and usually just re-rounds),
+  attempt 2  the full cold pipeline (``optimize_topology``: SA warm start,
+             restarts, classic baselines) if the warm solve fails to
+             converge or rounds to a disconnected support,
+  fallback   keep the incumbent and report why — a degraded-but-connected
+             topology beats a "better" one that never materialized.
+
+``time_to_reoptimized_topology`` (seconds of wall time from trigger to an
+adopted topology) is a first-class output: under churn the metric that
+matters is not just the new r_asym but how long the fleet ran on the stale
+graph, and ``benchmarks/bench_chaos.py`` folds it into the Eq. 34 clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .api import (
+    BATopoConfig, _make_solver, _pack_warm, extract_support, repair_selection,
+)
+from .constraints import ConstraintSet
+from .graph import Topology, all_edges, is_connected
+from .weights import metropolis_weights, polish_weights
+
+__all__ = ["DriftPolicy", "DriftDetector", "ReoptResult",
+           "reoptimize_topology", "first_drift"]
+
+
+@dataclass(frozen=True)
+class DriftPolicy:
+    """When is the world different enough to re-solve?
+
+    ``bw_rel_threshold``: trigger when any node's bandwidth moved by more
+    than this fraction of its baseline value (|B_i(t) − B_i(0)| / B_i(0)).
+    ``churn_events``: trigger when at least this many nodes flipped
+    alive/dead versus the baseline membership.
+    ``cooldown_steps``: suppress re-triggers for this many steps after one
+    fires — a re-solve in flight should not be pre-empted by the same drift.
+    ``max_residual``: an ADMM re-solve whose final summed-squared primal
+    residual exceeds this is declared non-convergent (fallback ladder).
+    """
+
+    bw_rel_threshold: float = 0.25
+    churn_events: int = 1
+    cooldown_steps: int = 0
+    max_residual: float = 1.0
+
+
+@dataclass
+class DriftDetector:
+    """Streaming comparison of (B(t), alive(t)) against a rebased baseline."""
+
+    policy: DriftPolicy
+    base_bandwidth: np.ndarray           # (n,)
+    base_alive: np.ndarray               # (n,)
+    last_trigger: int | None = None
+
+    @classmethod
+    def from_profile(cls, bandwidth0: np.ndarray, alive0: np.ndarray,
+                     policy: DriftPolicy | None = None) -> "DriftDetector":
+        return cls(policy or DriftPolicy(),
+                   np.asarray(bandwidth0, np.float64).copy(),
+                   np.asarray(alive0, np.float64).copy())
+
+    def check(self, t: int, bandwidth_t: np.ndarray,
+              alive_t: np.ndarray) -> str | None:
+        """Reason string ("bandwidth" / "churn") if step ``t`` drifted past
+        the thresholds, else None. Does not rebase — call :meth:`rebase`
+        after a re-optimized topology is actually adopted."""
+        if (self.last_trigger is not None
+                and t - self.last_trigger < self.policy.cooldown_steps):
+            return None
+        flips = int(np.sum(np.asarray(alive_t) != self.base_alive))
+        if flips >= self.policy.churn_events:
+            self.last_trigger = t
+            return "churn"
+        rel = np.abs(np.asarray(bandwidth_t, np.float64) - self.base_bandwidth)
+        rel = rel / np.maximum(self.base_bandwidth, 1e-12)
+        if float(rel.max(initial=0.0)) > self.policy.bw_rel_threshold:
+            self.last_trigger = t
+            return "bandwidth"
+        return None
+
+    def rebase(self, bandwidth_t: np.ndarray, alive_t: np.ndarray) -> None:
+        """Adopt the current world as the new baseline (after a reopt)."""
+        self.base_bandwidth = np.asarray(bandwidth_t, np.float64).copy()
+        self.base_alive = np.asarray(alive_t, np.float64).copy()
+
+
+def first_drift(chaos, policy: DriftPolicy | None = None,
+                start: int = 0) -> tuple[int, str] | None:
+    """Walk a ChaosSpec's (bandwidth, alive) tensors from ``start`` and
+    return the first (step, reason) the detector fires at, or None."""
+    det = DriftDetector.from_profile(chaos.bandwidth[start],
+                                     chaos.alive[start], policy)
+    for t in range(start + 1, chaos.steps):
+        reason = det.check(t, chaos.bandwidth[t], chaos.alive[t])
+        if reason is not None:
+            return t, reason
+    return None
+
+
+@dataclass
+class ReoptResult:
+    """Outcome of one re-optimization attempt ladder."""
+
+    topology: Topology
+    reoptimized: bool                 # False ⇒ incumbent kept (see reason)
+    attempts: int                     # solver attempts actually made
+    fallback_reason: str | None       # set iff reoptimized is False
+    time_to_reopt_s: float            # wall: trigger → adopted topology
+    r_asym_before: float
+    r_asym_after: float
+    meta: dict = field(default_factory=dict)
+
+
+def _round_to_topology(n: int, r: int, res, cs: ConstraintSet | None,
+                       cfg: BATopoConfig, name: str) -> Topology | None:
+    """ADMM result → rounded, repaired, polished Topology (None if the
+    repaired support is disconnected — the fallback-ladder signal)."""
+    score = res.g + res.g_raw
+    edge_ok = np.asarray(cs.edge_ok) if cs is not None else None
+    sel = extract_support(n, score, r, cfg.support_tol, z=res.z,
+                          edge_ok=edge_ok)
+    sel = repair_selection(n, sel, score, cs)
+    edges_full = all_edges(n)
+    edges = [edges_full[ln] for ln in np.nonzero(sel)[0]]
+    if not edges or not is_connected(n, edges):
+        return None
+    g = polish_weights(n, edges, metropolis_weights(n, edges),
+                       iters=cfg.polish_iters)
+    return Topology(n, edges, g, name=name,
+                    meta={"connected": True, "admm_iters": res.iters,
+                          "admm_residual": res.residual})
+
+
+def reoptimize_topology(
+    incumbent: Topology,
+    scenario: str = "homo",
+    cs: ConstraintSet | None = None,
+    node_bandwidths: np.ndarray | None = None,
+    r: int | None = None,
+    alive: np.ndarray | None = None,
+    cfg: BATopoConfig | None = None,
+    policy: DriftPolicy | None = None,
+) -> ReoptResult:
+    """Re-solve the topology under drifted constraints, warm-started from
+    the incumbent; keep the incumbent on any failure.
+
+    ``node_bandwidths`` is the *drifted* profile (node scenario — Algorithm 1
+    re-allocates per-node capacities under it); ``cs`` the drifted
+    ConstraintSet (constraint scenario). ``alive`` (optional, (n,) mask)
+    prunes dead nodes' edges from the warm-start support only — the re-solve
+    still covers all n nodes, because churned nodes rejoin at their frozen
+    params and need edges waiting for them.
+
+    The attempt ladder and the non-convergence test (``policy.max_residual``)
+    are documented in the module docstring; ``time_to_reopt_s`` measures
+    this call's wall time, i.e. how long training would run on the stale
+    incumbent before the new graph exists.
+    """
+    t_start = time.perf_counter()
+    cfg = cfg or BATopoConfig()
+    policy = policy or DriftPolicy()
+    n = incumbent.n
+    r = int(r if r is not None else len(incumbent.edges))
+    meta: dict = {"scenario": scenario, "r": r}
+
+    if scenario == "node":
+        if node_bandwidths is None:
+            raise ValueError("scenario='node' re-optimization requires the "
+                             "drifted node_bandwidths profile")
+        from .allocation import allocate_edge_capacity, graphical_repair
+        from .constraints import node_level_constraints
+
+        alloc = allocate_edge_capacity(np.asarray(node_bandwidths), r)
+        e_alloc = graphical_repair(alloc.e)
+        cs = node_level_constraints(n, e_alloc, np.asarray(node_bandwidths))
+        meta["b_unit"] = alloc.b_unit
+    elif scenario == "constraint" and cs is None:
+        raise ValueError("scenario='constraint' re-optimization requires "
+                         "the drifted ConstraintSet")
+
+    live_edges = incumbent.edges
+    if alive is not None:
+        a = np.asarray(alive)
+        live_edges = [e for e in incumbent.edges if a[e[0]] > 0 and a[e[1]] > 0]
+    if not live_edges:                      # a fully-dead incumbent support
+        live_edges = incumbent.edges        # fall back to the full support
+
+    r_before = incumbent.r_asym()
+    attempts = 0
+    candidate: Topology | None = None
+    fallback_reason: str | None = None
+
+    # ---- attempt 1: warm ADMM from the incumbent support ------------------
+    try:
+        attempts += 1
+        g0, z0, lam0 = _pack_warm(n, live_edges)
+        solver = _make_solver(n, r, scenario, cs, cfg)
+        if scenario == "homo":
+            res = solver.solve(g0=g0, lam0=lam0)
+        else:
+            res = solver.solve(g0=g0, z0=z0, lam0=lam0)
+        if not np.isfinite(res.residual) or res.residual > policy.max_residual:
+            fallback_reason = f"warm re-solve non-convergent (residual={res.residual:.3g})"
+        else:
+            candidate = _round_to_topology(
+                n, r, res, cs, cfg, f"ba-topo(n={n},r={r},reopt-warm)")
+            if candidate is None:
+                fallback_reason = "warm re-solve rounded to a disconnected support"
+    except Exception as exc:  # noqa: BLE001 — any solver failure → next rung
+        fallback_reason = f"warm re-solve raised {type(exc).__name__}: {exc}"
+
+    # ---- attempt 2: full cold pipeline ------------------------------------
+    if candidate is None:
+        from .api import optimize_topology
+
+        try:
+            attempts += 1
+            candidate = optimize_topology(
+                n, r, scenario=scenario, cs=cs,
+                node_bandwidths=node_bandwidths, cfg=cfg)
+            if not candidate.meta.get("connected", True):
+                candidate = None
+        except (ValueError, RuntimeError) as exc:
+            candidate = None
+            fallback_reason = (fallback_reason or "") + \
+                f"; cold pipeline failed: {exc}"
+
+    elapsed = time.perf_counter() - t_start
+    if candidate is None:
+        reason = fallback_reason or "no connected candidate"
+        return ReoptResult(topology=incumbent, reoptimized=False,
+                           attempts=attempts, fallback_reason=reason,
+                           time_to_reopt_s=elapsed,
+                           r_asym_before=r_before, r_asym_after=r_before,
+                           meta=meta)
+
+    r_after = candidate.r_asym()
+    candidate.meta.update(meta)
+    candidate.meta["r_asym"] = r_after
+    candidate.meta["time_to_reopt_s"] = elapsed
+    return ReoptResult(topology=candidate, reoptimized=True,
+                       attempts=attempts, fallback_reason=None,
+                       time_to_reopt_s=elapsed,
+                       r_asym_before=r_before, r_asym_after=r_after,
+                       meta=meta)

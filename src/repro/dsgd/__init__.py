@@ -18,6 +18,13 @@ from .compression import (
     random_k_compressor,
     top_k_compressor,
 )
+from .chaos import (
+    ChaosSpec,
+    degrade_matrix,
+    make_chaos,
+    no_chaos,
+    random_churn_windows,
+)
 from .dynamic import (
     cycle_contraction,
     cycle_tensor,
@@ -37,11 +44,15 @@ from .sim import (
     CommSpec,
     DSGDSimConfig,
     accuracy_curve_host,
+    accuracy_curve_host_chaos,
     accuracy_curve_host_cross,
     accuracy_curves,
     accuracy_curves_seeds,
+    consensus_curve_host_chaos,
     consensus_curve_host_cross,
+    consensus_curves_chaos,
     consensus_curves_cross,
+    train_curves_chaos,
     train_curves_cross,
 )
 from .trainer import (
@@ -63,6 +74,10 @@ __all__ = [
     "accuracy_curves_seeds",
     "CommSpec", "train_curves_cross", "accuracy_curve_host_cross",
     "consensus_curves_cross", "consensus_curve_host_cross",
+    "ChaosSpec", "no_chaos", "make_chaos", "random_churn_windows",
+    "degrade_matrix",
+    "train_curves_chaos", "accuracy_curve_host_chaos",
+    "consensus_curves_chaos", "consensus_curve_host_chaos",
     "ChocoState", "choco_gamma", "choco_gossip_init", "choco_gossip_step",
     "choco_mix", "compress_top_k", "compress_random_k",
     "identity_compressor", "random_k_compressor", "top_k_compressor",

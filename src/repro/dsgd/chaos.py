@@ -1,0 +1,210 @@
+"""Fault injection for the DSGD engines (DESIGN.md §14).
+
+Every scenario the repo could run before this module was a fixed graph with
+fixed bandwidths. ``ChaosSpec`` packages the four fault modes of a real
+decentralized deployment as PRECOMPUTED per-step tensors, so the scan engine
+consumes them as data leaves (a step-index gather inside the scan, the same
+trick that made dynamic cycles and CHOCO state vmap-able in DESIGN.md §12):
+
+  - ``alive      (T, n)``    node-alive masks — join/leave churn. A dead node
+    freezes (no gradient step, no mixing) and rejoins at its last params.
+  - ``link_up    (T, n, n)`` symmetric per-edge Bernoulli draws — packet
+    loss. A down link carries nothing that step; both endpoints fold the
+    lost weight into their self-weight (see ``degrade_matrix``).
+  - ``straggler  (T, n)``    per-node delay multipliers (≥ 1) — feed the
+    Eq. 34 step-time model (``benchmarks.common.chaos_step_times``), not the
+    training math: a straggler is late, not wrong.
+  - ``bandwidth  (T, n)``    time-varying per-node bandwidth profile B(t),
+    GB/s — feeds the time model and the drift detector
+    (``repro.core.reopt``), not the training math.
+
+``degrade_matrix`` is the graceful-degradation rule: lost off-diagonal mass
+(dead neighbors, down links) is folded into the surviving nodes' self
+weights, so the effective gossip matrix stays row-stochastic on the alive
+subgraph — mixing slows down instead of diverging. Dead rows AND columns are
+fully zeroed: a dead node neither sends nor receives, and the engine restores
+its frozen parameters with a ``where(alive, ...)`` after the mix. When W and
+``link_up`` are symmetric the degraded matrix stays symmetric (the mass a row
+loses equals the mass the mirror column loses), so double stochasticity — and
+therefore mean preservation across the alive set — survives every fault
+pattern.
+
+All constructors are host-side numpy (seeded, reproducible); only ``alive``
+and ``link_up`` ever ship to the device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = ["ChaosSpec", "no_chaos", "make_chaos", "random_churn_windows",
+           "degrade_matrix"]
+
+
+@dataclass(frozen=True)
+class ChaosSpec:
+    """Precomputed fault tensors for a ``steps``-iteration run on n nodes."""
+
+    alive: np.ndarray       # (T, n) float32 ∈ {0, 1}
+    link_up: np.ndarray     # (T, n, n) float32 ∈ {0, 1}, symmetric, diag 1
+    straggler: np.ndarray   # (T, n) float64 ≥ 1 — step-time multipliers
+    bandwidth: np.ndarray   # (T, n) float64 GB/s — B(t) per node
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def steps(self) -> int:
+        return self.alive.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.alive.shape[1]
+
+    @property
+    def faultless(self) -> bool:
+        """True when the *training-math* fault tensors are all-clear (alive
+        everywhere, every link up). Stragglers and bandwidth drift do not
+        touch the math — they only stretch the modeled clock."""
+        return bool(np.all(self.alive == 1.0) and np.all(self.link_up == 1.0))
+
+    def device_leaves(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """The two tensors the scan engine actually needs, as device arrays."""
+        return jnp.asarray(self.alive, jnp.float32), \
+            jnp.asarray(self.link_up, jnp.float32)
+
+    def validate(self) -> None:
+        T, n = self.alive.shape
+        if self.link_up.shape != (T, n, n):
+            raise ValueError(f"link_up shape {self.link_up.shape} != {(T, n, n)}")
+        if self.straggler.shape != (T, n) or self.bandwidth.shape != (T, n):
+            raise ValueError("straggler/bandwidth must be (steps, n)")
+        if not np.allclose(self.link_up, np.swapaxes(self.link_up, 1, 2)):
+            raise ValueError("link_up must be symmetric per step "
+                             "(an undirected edge drops for both endpoints)")
+        if np.any(self.straggler < 1.0):
+            raise ValueError("straggler multipliers must be ≥ 1")
+        if np.any(self.bandwidth <= 0.0):
+            raise ValueError("bandwidth profile must be positive")
+
+
+def no_chaos(steps: int, n: int, bandwidth: float = 9.76) -> ChaosSpec:
+    """The fault-free spec: running the chaos engine with it is a bit-exact
+    no-op versus the fault-less engine (tested)."""
+    return ChaosSpec(
+        alive=np.ones((steps, n), np.float32),
+        link_up=np.ones((steps, n, n), np.float32),
+        straggler=np.ones((steps, n), np.float64),
+        bandwidth=np.full((steps, n), float(bandwidth), np.float64),
+        meta={"faultless": True},
+    )
+
+
+def random_churn_windows(n: int, steps: int, events: int, seed: int = 0,
+                         min_alive: int = 2,
+                         min_down: int | None = None) -> list[tuple[int, int, int]]:
+    """Draw ``events`` reproducible (node, t_leave, t_rejoin) churn windows.
+
+    Windows never overlap on the same node and never take the alive count
+    below ``min_alive`` at any step. ``t_rejoin == steps`` means the node
+    leaves for good."""
+    rng = np.random.default_rng(seed)
+    down = np.zeros((steps, n), np.int64)
+    out: list[tuple[int, int, int]] = []
+    lo = max(min_down or steps // 8, 1)
+    for _ in range(events):
+        for _attempt in range(64):
+            node = int(rng.integers(n))
+            t0 = int(rng.integers(0, max(steps - lo, 1)))
+            t1 = min(int(t0 + rng.integers(lo, max(steps // 2, lo + 1))), steps)
+            window = down[t0:t1]
+            if window[:, node].any():
+                continue                          # node already down here
+            if (n - (window.sum(axis=1) + 1)).min() < min_alive:
+                continue                          # would depopulate the net
+            window[:, node] = 1
+            out.append((node, t0, t1))
+            break
+    return out
+
+
+def make_chaos(steps: int, n: int, seed: int = 0, *,
+               churn: list[tuple[int, int, int]] | None = None,
+               p_drop: float = 0.0,
+               straggler_prob: float = 0.0,
+               straggler_mult: float = 3.0,
+               bandwidth: np.ndarray | float = 9.76) -> ChaosSpec:
+    """Build a ChaosSpec from scenario knobs.
+
+    ``churn``: explicit (node, t_leave, t_rejoin) windows (deterministic —
+    what the benches and the drift detector key on; use
+    ``random_churn_windows`` to draw them). ``p_drop``: per-step per-edge
+    Bernoulli link-drop probability (drawn once on the upper triangle and
+    mirrored, so the draw is symmetric). ``straggler_prob``/``straggler_mult``:
+    each step each node independently runs ``straggler_mult×`` slow with the
+    given probability. ``bandwidth``: scalar, (n,) static profile, or a full
+    (T, n) drifting profile B(t).
+    """
+    rng = np.random.default_rng(seed)
+    alive = np.ones((steps, n), np.float32)
+    for node, t0, t1 in churn or ():
+        if not (0 <= node < n and 0 <= t0 <= t1 <= steps):
+            raise ValueError(f"churn window {(node, t0, t1)} out of range "
+                             f"for steps={steps}, n={n}")
+        alive[t0:t1, node] = 0.0
+
+    link_up = np.ones((steps, n, n), np.float32)
+    if p_drop > 0.0:
+        iu, ju = np.triu_indices(n, k=1)
+        drops = rng.random((steps, len(iu))) < p_drop
+        link_up[:, iu, ju] = np.where(drops, 0.0, 1.0)
+        link_up[:, ju, iu] = link_up[:, iu, ju]
+
+    straggler = np.ones((steps, n), np.float64)
+    if straggler_prob > 0.0:
+        slow = rng.random((steps, n)) < straggler_prob
+        straggler = np.where(slow, float(straggler_mult), 1.0)
+
+    bw = np.asarray(bandwidth, np.float64)
+    if bw.ndim == 0:
+        bw = np.full((steps, n), float(bw))
+    elif bw.ndim == 1:
+        bw = np.broadcast_to(bw, (steps, n)).copy()
+    elif bw.shape != (steps, n):
+        raise ValueError(f"bandwidth profile shape {bw.shape} != {(steps, n)}")
+
+    spec = ChaosSpec(alive=alive, link_up=link_up, straggler=straggler,
+                     bandwidth=bw,
+                     meta={"seed": seed, "p_drop": p_drop,
+                           "churn": list(churn or ()),
+                           "straggler_prob": straggler_prob})
+    spec.validate()
+    return spec
+
+
+def degrade_matrix(W: jnp.ndarray, alive: jnp.ndarray,
+                   link_up: jnp.ndarray) -> jnp.ndarray:
+    """Renormalize a gossip matrix under node/link faults — on device.
+
+    An off-diagonal entry survives iff both endpoints are alive AND the link
+    is up; every entry a row loses is folded into that row's self-weight, so
+    alive rows stay row-stochastic (mixing degrades gracefully instead of
+    leaking mass). Dead rows and columns are fully zeroed — the engine
+    restores dead nodes' frozen state after the mix.
+
+    With no faults this is an IEEE-exact identity (mask multiplies by 1.0,
+    the folded loss is an exact 0.0 sum), which is what makes the fault-free
+    chaos engine bit-equal to the fault-less engine. Broadcasts over leading
+    batch axes; symmetric (W, link_up) stays symmetric.
+    """
+    dt = W.dtype
+    n = W.shape[-1]
+    alive = alive.astype(dt)
+    pair = alive[..., :, None] * alive[..., None, :] * link_up.astype(dt)
+    eye = jnp.eye(n, dtype=dt)
+    off = W * (1.0 - eye)
+    kept = off * pair
+    lost = (off - kept).sum(axis=-1)
+    diag = (jnp.diagonal(W, axis1=-2, axis2=-1) + lost) * alive
+    return kept + eye * diag[..., :, None]

@@ -49,6 +49,23 @@ key for random-k) rides the scan carry while γ is a vmapped data leaf.
     the ``engine="host"`` fallbacks and parity oracles. They share the mix
     helper and key-split stream with the scan engine, so parity is exact up
     to scan-vs-loop float reassociation.
+
+Chaos engine (DESIGN.md §14): the cross-product engine under injected
+faults. A :class:`repro.dsgd.chaos.ChaosSpec` provides per-step node-alive
+masks and link-drop draws; each step the selected cycle matrix is
+renormalized on device (``degrade_matrix`` — lost mass folds into self
+weights, row-stochastic on the alive subgraph) and dead nodes are frozen at
+their last state with a ``where(alive, ...)`` after the mix, so they rejoin
+at exactly the params they left with. The fault tensors ride the scan as
+per-step data leaves next to the batch-index stream, vmapped across runs —
+one dispatch for the whole fault × {static, dynamic} × {dense, CHOCO} cross
+product. A fault-free spec is a bit-exact no-op versus the fault-less
+engine (the degradation arithmetic is IEEE-exact under all-clear masks).
+
+  - ``train_curves_chaos`` / ``consensus_curves_chaos`` — the vmapped scan
+    engines; ``chaos`` is one shared ChaosSpec or one per run.
+  - ``accuracy_curve_host_chaos`` / ``consensus_curve_host_chaos`` — the
+    per-iteration host loops, fallback + parity oracles (≤ 1e-6, tested).
 """
 from __future__ import annotations
 
@@ -74,6 +91,7 @@ from .compression import (
     random_k_compressor,
     top_k_compressor,
 )
+from .chaos import ChaosSpec, degrade_matrix
 from .dynamic import stack_cycles
 from .gossip import gossip_sim_tree, select_cycle_matrix
 
@@ -83,6 +101,8 @@ __all__ = [
     "accuracy_curve_host",
     "CommSpec", "train_curves_cross", "accuracy_curve_host_cross",
     "consensus_curves_cross", "consensus_curve_host_cross",
+    "train_curves_chaos", "accuracy_curve_host_chaos",
+    "consensus_curves_chaos", "consensus_curve_host_chaos",
 ]
 
 
@@ -527,6 +547,283 @@ def consensus_curves_cross(cycles, gammas, spec: CommSpec, x0, iters: int,
     gammas = jnp.asarray(gammas, x0.dtype)
     key0 = jax.random.PRNGKey(seed + 1)
     errs = _cross_consensus_fns(spec)(Wc, jnp.asarray(R), gammas, x0, key0, jnp.arange(iters))
+    return np.asarray(errs)
+
+
+# ---------------------------------------------------------------------------
+# chaos engine: the cross product under injected faults (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def _freeze_tree(alive_t, new, old):
+    """``where(alive, new, old)`` over stacked ``(n, ...)`` pytrees — dead
+    nodes keep their previous state bit-for-bit (freeze/rejoin semantics)."""
+    keep = alive_t > 0
+
+    def sel(a, b):
+        return jnp.where(keep.reshape((keep.shape[0],) + (1,) * (a.ndim - 1)),
+                         a, b)
+
+    return jax.tree.map(sel, new, old)
+
+
+def _stack_chaos(chaos, runs: int, steps: int, n: int):
+    """Per-run (alive, link_up) device tensors, truncated to ``steps``.
+
+    ``chaos``: one ChaosSpec shared by every run, or a sequence of one per
+    run. Each spec must cover ≥ ``steps`` iterations on exactly n nodes.
+    """
+    specs = [chaos] * runs if isinstance(chaos, ChaosSpec) else list(chaos)
+    if len(specs) != runs:
+        raise ValueError(f"got {len(specs)} ChaosSpecs for {runs} runs")
+    for s in specs:
+        if s.n != n:
+            raise ValueError(f"ChaosSpec is for n={s.n}, engine runs n={n}")
+        if s.steps < steps:
+            raise ValueError(f"ChaosSpec covers {s.steps} steps, run needs "
+                             f"{steps}")
+    alive = jnp.asarray(np.stack([s.alive[:steps] for s in specs]),
+                        jnp.float32)
+    link = jnp.asarray(np.stack([s.link_up[:steps] for s in specs]),
+                       jnp.float32)
+    return alive, link
+
+
+def _train_chaos_impl(Wc, R, gamma, alive, link_up, X, y, Xte, yte, perm,
+                      params, mom, key0, lr, momentum, *, spec: CommSpec):
+    """One cross-product DSGD run under faults → per-epoch accuracy (epochs,).
+
+    ``alive (epochs, iters, n)`` / ``link_up (epochs, iters, n, n)`` ride the
+    scan next to the batch-index stream. Each step the cycle matrix is
+    degraded on device and dead nodes are frozen (no gradient step, no mix)
+    at their pre-step state, rejoining at exactly their last params. With
+    all-clear masks every extra op is IEEE-exact, so the fault-free run is
+    bit-equal to ``_train_cross_impl``.
+    """
+    grad_fn = jax.vmap(jax.grad(mlp_loss))
+
+    def it_body(carry, xs):
+        idx, alive_t, link_t = xs                 # (n, batch), (n,), (n, n)
+        if spec.choco:
+            params, mom, hat, t, key = carry
+        else:
+            params, mom, t = carry
+        xb, yb = X[idx], y[idx]                   # on-device batch gather
+        g = grad_fn(params, xb, yb)
+        mom_new = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        p_new = jax.tree.map(lambda p, m: p - lr * m, params, mom_new)
+        W = degrade_matrix(select_cycle_matrix(Wc, R, t), alive_t, link_t)
+        if spec.choco:
+            key, sub = jax.random.split(key)
+            p_mix, hat_new = _mix_pytree(spec, p_new, hat, W, gamma, sub)
+            params = _freeze_tree(alive_t, p_mix, params)
+            mom = _freeze_tree(alive_t, mom_new, mom)
+            hat = _freeze_tree(alive_t, hat_new, hat)
+            return (params, mom, hat, t + 1, key), None
+        p_mix = gossip_sim_tree(p_new, W.astype(jnp.float32))
+        params = _freeze_tree(alive_t, p_mix, params)
+        mom = _freeze_tree(alive_t, mom_new, mom)
+        return (params, mom, t + 1), None
+
+    def epoch_body(carry, xs):
+        carry, _ = lax.scan(it_body, carry, xs)
+        mean = jax.tree.map(lambda a: a.mean(axis=0), carry[0])
+        pred = jnp.argmax(mlp_logits(mean, Xte), axis=1)
+        return carry, jnp.mean(pred == yte)
+
+    t0 = jnp.int32(0)
+    if spec.choco:
+        hat = jax.tree.map(jnp.zeros_like, params)
+        init = (params, mom, hat, t0, key0)
+    else:
+        init = (params, mom, t0)
+    _, accs = lax.scan(epoch_body, init, (perm, alive, link_up))
+    return accs
+
+
+@functools.lru_cache(maxsize=None)
+def _chaos_train_fns(spec: CommSpec):
+    # batched over (cycle, length, γ, alive, link_up) — each run carries its
+    # own fault realization; data/init/batch order/key stream are shared
+    impl = functools.partial(_train_chaos_impl, spec=spec)
+    return jax.jit(jax.vmap(impl, in_axes=(0, 0, 0, 0, 0) + (None,) * 10))
+
+
+def train_curves_chaos(cycles, gammas, spec: CommSpec, chaos, X, y, parts,
+                       Xte, yte, cfg: DSGDSimConfig = DSGDSimConfig()):
+    """``train_curves_cross`` under injected faults — ONE vmapped dispatch.
+
+    ``chaos``: a :class:`~repro.dsgd.chaos.ChaosSpec` shared by all runs or
+    a sequence with one spec per run (each covering ≥ epochs × iters steps).
+    Dead nodes freeze and rejoin at their last params; a fault-free spec
+    reproduces :func:`train_curves_cross` bit-exactly (tested). Returns
+    (accs (B, epochs), iters_per_epoch).
+    """
+    Wc, R = stack_cycles(cycles)
+    Wc = jnp.asarray(Wc, jnp.float32)
+    n = Wc.shape[-1]
+    perm = jnp.asarray(epoch_permutations(parts, cfg.epochs, cfg.batch,
+                                          seed=cfg.seed))
+    iters = perm.shape[1]
+    alive, link = _stack_chaos(chaos, len(cycles), cfg.epochs * iters, n)
+    alive = alive.reshape(len(cycles), cfg.epochs, iters, n)
+    link = link.reshape(len(cycles), cfg.epochs, iters, n, n)
+    classes = int(np.asarray(y).max()) + 1
+    params, mom = _init_worker_state(n, X.shape[-1], classes, cfg)
+    key0 = jax.random.PRNGKey(cfg.seed + 1)
+    gammas = jnp.asarray(gammas, jnp.float32)
+    accs = _chaos_train_fns(spec)(Wc, jnp.asarray(R), gammas, alive, link,
+                                  X, y, Xte, yte, perm, params, mom, key0,
+                                  cfg.lr, cfg.momentum)
+    return accs, iters
+
+
+def accuracy_curve_host_chaos(cycle, gamma, spec: CommSpec, chaos: ChaosSpec,
+                              X, y, parts, Xte, yte,
+                              cfg: DSGDSimConfig = DSGDSimConfig()):
+    """Per-iteration host loop for ONE chaos run — the ``engine="host"``
+    fallback and parity oracle of :func:`train_curves_chaos`.
+
+    Fault tensors are indexed on host (``chaos.alive[t]``); the jitted step
+    shares ``degrade_matrix``, the mix helpers, and the freeze rule with the
+    scan engine. Returns (accs (epochs,), iters).
+    """
+    cycle = [jnp.asarray(W, jnp.float32) for W in np.asarray(cycle)]
+    n = cycle[0].shape[-1]
+    classes = int(np.asarray(y).max()) + 1
+    params, mom = _init_worker_state(n, X.shape[-1], classes, cfg)
+    hat = jax.tree.map(jnp.zeros_like, params)
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    lr, momentum = cfg.lr, cfg.momentum
+    gamma = jnp.float32(gamma)
+
+    grad_fn = jax.vmap(jax.grad(mlp_loss))
+
+    @jax.jit
+    def step(params, mom, hat, xb, yb, W, alive_t, link_t, sub):
+        g = grad_fn(params, xb, yb)
+        mom_new = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        p_new = jax.tree.map(lambda p, m: p - lr * m, params, mom_new)
+        Wd = degrade_matrix(W, alive_t, link_t)
+        if spec.choco:
+            p_mix, hat_new = _mix_pytree(spec, p_new, hat, Wd, gamma, sub)
+        else:
+            p_mix, hat_new = gossip_sim_tree(p_new, Wd), hat
+        return (_freeze_tree(alive_t, p_mix, params),
+                _freeze_tree(alive_t, mom_new, mom),
+                _freeze_tree(alive_t, hat_new, hat))
+
+    @jax.jit
+    def accuracy(params):
+        mean = jax.tree.map(lambda a: a.mean(axis=0), params)
+        pred = jnp.argmax(mlp_logits(mean, Xte), axis=1)
+        return jnp.mean(pred == yte)
+
+    perm = epoch_permutations(parts, cfg.epochs, cfg.batch, seed=cfg.seed)
+    iters = perm.shape[1]
+    alive, link = _stack_chaos(chaos, 1, cfg.epochs * iters, n)
+    alive, link = alive[0], link[0]
+    accs = []
+    t = 0
+    for e in range(cfg.epochs):
+        for it in range(iters):
+            idx = perm[e, it]                     # (n, batch)
+            xb = jnp.stack([X[idx[w]] for w in range(n)])
+            yb = jnp.stack([y[idx[w]] for w in range(n)])
+            key, sub = jax.random.split(key)
+            params, mom, hat = step(params, mom, hat, xb, yb,
+                                    cycle[t % len(cycle)],
+                                    alive[t], link[t], sub)
+            t += 1
+        accs.append(float(accuracy(params)))
+    return np.asarray(accs), iters
+
+
+def _consensus_chaos_impl(Wc, R, gamma, alive, link_up, x0, key0, ts,
+                          *, spec: CommSpec):
+    """Consensus curve of one run under faults → errors (iters+1,).
+
+    The error is measured against the FULL network mean (frozen dead nodes
+    included), so a long leave window shows up as an error plateau — the
+    honest view of what the network has actually agreed on.
+    """
+    def step(carry, xs):
+        t, alive_t, link_t = xs
+        W = degrade_matrix(select_cycle_matrix(Wc, R, t), alive_t, link_t)
+        keep = (alive_t > 0)[:, None]
+        if spec.choco:
+            x, hat, key = carry
+            key, sub = jax.random.split(key)
+            x_new, hat_new = _mix_pytree(spec, x, hat, W, gamma, sub)
+            x = jnp.where(keep, x_new, x)
+            hat = jnp.where(keep, hat_new, hat)
+            carry = (x, hat, key)
+        else:
+            x = jnp.where(keep, W @ carry, carry)
+            carry = x
+        return carry, jnp.linalg.norm(x - x.mean(axis=0, keepdims=True))
+
+    e0 = jnp.linalg.norm(x0 - x0.mean(axis=0, keepdims=True))
+    init = (x0, jnp.zeros_like(x0), key0) if spec.choco else x0
+    _, errs = lax.scan(step, init, (ts, alive, link_up))
+    return jnp.concatenate([e0[None], errs])
+
+
+@functools.lru_cache(maxsize=None)
+def _chaos_consensus_fns(spec: CommSpec):
+    impl = functools.partial(_consensus_chaos_impl, spec=spec)
+    return jax.jit(jax.vmap(impl, in_axes=(0, 0, 0, 0, 0, None, None, None)))
+
+
+def consensus_curves_chaos(cycles, gammas, spec: CommSpec, chaos, x0,
+                           iters: int, seed: int = 0):
+    """``consensus_curves_cross`` under injected faults — one dispatch.
+
+    Same contract (shared x0, ``PRNGKey(seed + 1)`` compressor stream);
+    ``chaos`` as in :func:`train_curves_chaos`. Returns (B, iters+1) numpy.
+    """
+    Wc, R = stack_cycles(cycles)
+    x0 = jnp.asarray(x0)
+    n = Wc.shape[-1]
+    Wc = jnp.asarray(Wc, x0.dtype)
+    alive, link = _stack_chaos(chaos, len(cycles), iters, n)
+    gammas = jnp.asarray(gammas, x0.dtype)
+    key0 = jax.random.PRNGKey(seed + 1)
+    errs = _chaos_consensus_fns(spec)(Wc, jnp.asarray(R), gammas, alive, link,
+                                      x0, key0, jnp.arange(iters))
+    return np.asarray(errs)
+
+
+def consensus_curve_host_chaos(cycle, gamma, spec: CommSpec,
+                               chaos: ChaosSpec, x0, iters: int,
+                               seed: int = 0):
+    """Per-iteration host loop for ONE chaos consensus run — fallback and
+    parity oracle of :func:`consensus_curves_chaos`. Shares the degradation,
+    mix, and freeze rules (jitted step) and the key stream with the engine.
+    """
+    x0 = jnp.asarray(x0)
+    cycle = [jnp.asarray(W, x0.dtype) for W in np.asarray(cycle)]
+    n = cycle[0].shape[-1]
+    gamma = jnp.asarray(gamma, x0.dtype)
+
+    @jax.jit
+    def step(x, hat, W, alive_t, link_t, sub):
+        Wd = degrade_matrix(W, alive_t, link_t)
+        keep = (alive_t > 0)[:, None]
+        if spec.choco:
+            x_new, hat_new = _mix_pytree(spec, x, hat, Wd, gamma, sub)
+            return jnp.where(keep, x_new, x), jnp.where(keep, hat_new, hat)
+        return jnp.where(keep, Wd @ x, x), hat
+
+    alive, link = _stack_chaos(chaos, 1, iters, n)
+    alive, link = alive[0], link[0]
+    x, hat = x0, jnp.zeros_like(x0)
+    key = jax.random.PRNGKey(seed + 1)
+    errs = [float(jnp.linalg.norm(x0 - x0.mean(axis=0, keepdims=True)))]
+    for t in range(iters):
+        key, sub = jax.random.split(key)
+        x, hat = step(x, hat, cycle[t % len(cycle)], alive[t], link[t], sub)
+        errs.append(float(jnp.linalg.norm(
+            x - x.mean(axis=0, keepdims=True))))
     return np.asarray(errs)
 
 

@@ -34,7 +34,9 @@ def parse_bandwidths(spec: str, n: int) -> np.ndarray:
             vals.extend([float(v)] * int(k))
         else:
             vals.append(float(part))
-    assert len(vals) == n, f"bandwidth list has {len(vals)} entries, n={n}"
+    if len(vals) != n:
+        raise ValueError(f"--bandwidths expands to {len(vals)} entries "
+                         f"but --n is {n}: {spec!r}")
     return np.asarray(vals)
 
 
@@ -59,7 +61,9 @@ def main() -> None:
     if args.scenario == "homo":
         topo = optimize_topology(n, args.r, "homo", cfg=cfg)
     elif args.scenario == "node":
-        assert args.bandwidths, "--bandwidths required for node scenario"
+        if not args.bandwidths:
+            raise ValueError("--bandwidths is required for --scenario node "
+                             "(e.g. --bandwidths 9.76x8,3.25x8)")
         b = parse_bandwidths(args.bandwidths, n)
         topo = optimize_topology(n, args.r, "node", node_bandwidths=b, cfg=cfg)
     elif args.scenario == "intra":

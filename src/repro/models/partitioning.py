@@ -51,5 +51,8 @@ def hint(x, *logical_axes: str | None):
         return x
     try:
         return jax.lax.with_sharding_constraint(x, P(*entries))
-    except Exception:
-        return x  # no ambient mesh (e.g. sim path) — hints are best-effort
+    except RuntimeError:
+        # with_sharding_constraint raises RuntimeError when a PartitionSpec
+        # is used with no ambient mesh (e.g. sim path) — hints are
+        # best-effort there; anything else is a real bug and propagates
+        return x

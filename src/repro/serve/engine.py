@@ -113,7 +113,12 @@ class ServingEngine:
         """prompts: (B, S) int32 (right-aligned, no padding support needed for
         the fixed-shape engine). Returns (B, max_new_tokens) int32."""
         B, S = prompts.shape
-        assert B == self.scfg.batch_size, (B, self.scfg.batch_size)
+        if B != self.scfg.batch_size:
+            raise ValueError(
+                f"prompts batch shape {(B, S)} does not match the engine's "
+                f"fixed batch_size={self.scfg.batch_size}; this engine "
+                f"compiles one (batch_size, S) shape — pad or re-batch the "
+                f"prompts, or build a ServeConfig with batch_size={B}")
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         if extra_inputs:
             batch.update(extra_inputs)

@@ -1,0 +1,288 @@
+"""Fault-path tests (DESIGN.md §14): ``degrade_matrix`` invariants, the
+fault-free no-op guarantee, chaos scan-vs-host parity, churn freeze/rejoin
+semantics, the drift detector, and the reopt retry/fallback ladder."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (
+    BATopoConfig,
+    make_baseline,
+    optimize_topology,
+    pod_boundary_constraints,
+)
+from repro.core.reopt import (
+    DriftDetector,
+    DriftPolicy,
+    first_drift,
+    reoptimize_topology,
+)
+from repro.data import class_balanced_partition, make_classification_data
+from repro.dsgd.chaos import ChaosSpec, degrade_matrix, make_chaos, no_chaos
+from repro.dsgd.dynamic import cycle_tensor, static_cycle
+from repro.dsgd.sim import (
+    CommSpec,
+    DSGDSimConfig,
+    accuracy_curve_host_chaos,
+    consensus_curve_host_chaos,
+    consensus_curves_chaos,
+    consensus_curves_cross,
+    train_curves_chaos,
+    train_curves_cross,
+)
+
+N = 8
+CFG = DSGDSimConfig(epochs=2, batch=16, hidden=32, seed=0)
+DENSE = CommSpec()
+
+
+@pytest.fixture(scope="module")
+def ring():
+    return make_baseline("ring", N)
+
+
+@pytest.fixture(scope="module")
+def cycles(ring):
+    return [static_cycle(ring.W), cycle_tensor(ring)]
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return np.random.default_rng(0).normal(size=(N, 24))
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    X, y = make_classification_data(num_classes=6, dim=24,
+                                    samples_per_class=80, seed=0)
+    Xte, yte = make_classification_data(num_classes=6, dim=24,
+                                        samples_per_class=24, seed=0,
+                                        noise_seed=10_001)
+    parts = class_balanced_partition(y, N, seed=0)
+    return (jnp.asarray(X), jnp.asarray(y), parts,
+            jnp.asarray(Xte), jnp.asarray(yte))
+
+
+# --- ChaosSpec construction -------------------------------------------------
+
+def test_make_chaos_shapes_and_validation():
+    ch = make_chaos(20, N, seed=1, churn=[(2, 3, 9)], p_drop=0.2,
+                    straggler_prob=0.3, straggler_mult=2.5)
+    assert ch.steps == 20 and ch.n == N
+    assert not ch.faultless
+    np.testing.assert_array_equal(ch.link_up,
+                                  np.swapaxes(ch.link_up, 1, 2))
+    assert ch.alive[2, 2] == 1.0 and ch.alive[5, 2] == 0.0 \
+        and ch.alive[9, 2] == 1.0
+    assert no_chaos(20, N).faultless
+    with pytest.raises(ValueError, match="out of range"):
+        make_chaos(10, N, churn=[(0, 5, 12)])
+    with pytest.raises(ValueError, match="symmetric"):
+        bad = no_chaos(4, N)
+        lu = bad.link_up.copy()
+        lu[0, 0, 1] = 0.0  # break symmetry on one side only
+        ChaosSpec(bad.alive, lu, bad.straggler, bad.bandwidth).validate()
+    # stragglers/bandwidth never touch the training-math fault flag
+    assert make_chaos(8, N, straggler_prob=1.0, straggler_mult=4.0).faultless
+
+
+# --- degrade_matrix invariants ----------------------------------------------
+
+def test_degrade_matrix_identity_when_no_faults(ring):
+    W = jnp.asarray(ring.W)
+    alive = jnp.ones(N)
+    link = jnp.ones((N, N))
+    np.testing.assert_array_equal(np.asarray(degrade_matrix(W, alive, link)),
+                                  np.asarray(W))
+
+
+def test_degrade_matrix_dead_rows_cols_and_stochasticity(ring):
+    W = jnp.asarray(ring.W)
+    alive = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0])
+    link = jnp.ones((N, N)).at[2, 3].set(0.0).at[3, 2].set(0.0)
+    Wd = np.asarray(degrade_matrix(W, alive, link))
+    dead = np.nonzero(np.asarray(alive) == 0)[0]
+    live = np.nonzero(np.asarray(alive) == 1)[0]
+    np.testing.assert_array_equal(Wd[dead], 0.0)        # dead rows zeroed
+    np.testing.assert_array_equal(Wd[:, dead], 0.0)     # dead cols zeroed
+    np.testing.assert_allclose(Wd[live].sum(axis=1), 1.0, atol=1e-12)
+    assert Wd[2, 3] == 0.0 and Wd[3, 2] == 0.0          # dropped link
+    np.testing.assert_allclose(Wd, Wd.T, atol=0)        # symmetry preserved
+    # doubly stochastic on the alive set ⇒ mean preserved across live nodes
+    np.testing.assert_allclose(Wd[np.ix_(live, live)].sum(axis=0), 1.0,
+                               atol=1e-12)
+
+
+def test_degrade_matrix_broadcasts_batch_axes(ring):
+    W = jnp.asarray(ring.W)
+    alive = jnp.ones((5, N)).at[3, 0].set(0.0)
+    link = jnp.ones((5, N, N))
+    Wd = np.asarray(degrade_matrix(W[None], alive, link))
+    assert Wd.shape == (5, N, N)
+    np.testing.assert_array_equal(Wd[0], np.asarray(W))
+    np.testing.assert_array_equal(Wd[3, 0], 0.0)
+
+
+# --- fault-free no-op (bit-exact) -------------------------------------------
+
+def test_faultless_chaos_train_bit_equal_to_cross_engine(cycles, dataset):
+    X, y, parts, Xte, yte = dataset
+    gammas = np.ones(len(cycles))
+    ref, it = train_curves_cross(cycles, gammas, DENSE, X, y, parts,
+                                 Xte, yte, CFG)
+    ch = no_chaos(CFG.epochs * it, N)
+    accs, it2 = train_curves_chaos(cycles, gammas, DENSE, ch, X, y, parts,
+                                   Xte, yte, CFG)
+    assert it2 == it
+    np.testing.assert_array_equal(np.asarray(accs), np.asarray(ref))
+
+
+def test_faultless_chaos_choco_train_bit_equal(cycles, dataset):
+    X, y, parts, Xte, yte = dataset
+    spec = CommSpec("top_k", 0.5)
+    gammas = np.full(len(cycles), 0.6)
+    ref, it = train_curves_cross(cycles, gammas, spec, X, y, parts,
+                                 Xte, yte, CFG)
+    ch = no_chaos(CFG.epochs * it, N)
+    accs, _ = train_curves_chaos(cycles, gammas, spec, ch, X, y, parts,
+                                 Xte, yte, CFG)
+    np.testing.assert_array_equal(np.asarray(accs), np.asarray(ref))
+
+
+def test_faultless_chaos_consensus_bit_equal(cycles, x0):
+    iters = 40
+    gammas = np.ones(len(cycles))
+    ref = consensus_curves_cross(cycles, gammas, DENSE, x0, iters, seed=0)
+    errs = consensus_curves_chaos(cycles, gammas, DENSE, no_chaos(iters, N),
+                                  x0, iters, seed=0)
+    np.testing.assert_array_equal(np.asarray(errs), np.asarray(ref))
+
+
+# --- scan vs host parity under faults ---------------------------------------
+
+ACC_TOL = 1.0 / 144 + 1e-7          # one borderline test sample of 144
+
+
+def test_chaos_train_scan_matches_host(cycles, dataset):
+    X, y, parts, Xte, yte = dataset
+    _, it = train_curves_cross(cycles[:1], np.ones(1), DENSE, X, y, parts,
+                               Xte, yte, CFG)
+    ch = make_chaos(CFG.epochs * it, N, seed=3, churn=[(1, 2, 5)], p_drop=0.1)
+    accs, _ = train_curves_chaos(cycles, np.ones(len(cycles)), DENSE, ch,
+                                 X, y, parts, Xte, yte, CFG)
+    accs = np.asarray(accs)
+    for b, cyc in enumerate(cycles):
+        host, _ = accuracy_curve_host_chaos(cyc, 1.0, DENSE, ch, X, y, parts,
+                                            Xte, yte, CFG)
+        assert np.abs(accs[b] - host).max() <= ACC_TOL
+
+
+def test_chaos_choco_consensus_scan_matches_host(cycles, x0):
+    iters = 50
+    spec = CommSpec("top_k", 0.25)
+    ch = make_chaos(iters, N, seed=4, churn=[(0, 10, 35)], p_drop=0.05)
+    errs = consensus_curves_chaos(cycles, np.full(len(cycles), 0.4), spec,
+                                  ch, x0, iters, seed=0)
+    errs = np.asarray(errs)
+    for b, cyc in enumerate(cycles):
+        host = consensus_curve_host_chaos(cyc, 0.4, spec, ch, x0, iters,
+                                          seed=0)
+        rel = np.abs(errs[b] - host) / host[0]
+        assert rel.max() <= 1e-6
+
+
+# --- churn freeze/rejoin semantics ------------------------------------------
+
+def test_churned_node_freezes_and_rejoins(ring, x0):
+    """While node k is dead its value must not move; the live nodes keep
+    contracting toward the mean of the full network state."""
+    iters = 30
+    t0, t1, k = 5, 20, 3
+    ch = make_chaos(iters, N, churn=[(k, t0, t1)])
+    alive, link = ch.device_leaves()
+    x = jnp.asarray(x0)
+    W = jnp.asarray(ring.W)
+    frozen = None
+    for t in range(iters):
+        Wd = degrade_matrix(W, alive[t], link[t])
+        x_new = Wd @ x
+        keep = alive[t].reshape(-1, 1) > 0
+        x = jnp.where(keep, x_new, x)
+        if t == t0:
+            frozen = np.asarray(x[k]).copy()
+        if t0 < t < t1:
+            np.testing.assert_array_equal(np.asarray(x[k]), frozen)
+    # after rejoin the node is pulled back toward consensus
+    err_k = np.linalg.norm(np.asarray(x[k]) - x0.mean(axis=0))
+    assert err_k < np.linalg.norm(frozen - x0.mean(axis=0))
+
+
+# --- drift detector ----------------------------------------------------------
+
+def test_drift_detector_thresholds_and_cooldown():
+    n, T = 4, 30
+    bw = np.full((T, n), 10.0)
+    bw[10:, 0] = 5.0                       # 50% drop at t=10
+    ch = make_chaos(T, n, churn=[(2, 20, 25)], bandwidth=bw)
+    assert first_drift(ch) == (10, "bandwidth")
+    # a higher threshold ignores the bandwidth move and fires on churn
+    pol = DriftPolicy(bw_rel_threshold=0.9)
+    assert first_drift(ch, pol) == (20, "churn")
+    det = DriftDetector.from_profile(ch.bandwidth[0], ch.alive[0],
+                                     DriftPolicy(cooldown_steps=100))
+    assert det.check(10, ch.bandwidth[10], ch.alive[10]) == "bandwidth"
+    assert det.check(20, ch.bandwidth[20], ch.alive[20]) is None  # cooldown
+    det.rebase(ch.bandwidth[10], ch.alive[10])
+    det.last_trigger = None
+    assert det.check(11, ch.bandwidth[11], ch.alive[11]) is None  # rebased
+
+
+# --- reopt retry/fallback ladder --------------------------------------------
+
+REOPT_CFG = BATopoConfig(sa_iters=150, polish_iters=150)
+
+
+@pytest.fixture(scope="module")
+def incumbent():
+    return optimize_topology(16, 32, "homo", cfg=REOPT_CFG)
+
+
+def test_reopt_improves_or_keeps_connected(incumbent):
+    bw = np.array([9.76] * 8 + [3.25] * 8)
+    bw[:4] = 1.0                           # drifted profile
+    res = reoptimize_topology(incumbent, scenario="node",
+                              node_bandwidths=bw, cfg=REOPT_CFG)
+    assert res.reoptimized
+    assert res.topology.meta.get("connected", True)
+    assert res.time_to_reopt_s > 0
+    assert np.isfinite(res.r_asym_after) and res.r_asym_after < 1.0
+
+
+def test_reopt_nonconvergent_falls_through_ladder(incumbent):
+    """max_residual=0 declares every warm solve non-convergent: the ladder
+    must go to attempt 2 (cold pipeline) instead of adopting it."""
+    res = reoptimize_topology(incumbent, scenario="homo", cfg=REOPT_CFG,
+                              policy=DriftPolicy(max_residual=0.0))
+    assert res.attempts == 2
+    assert res.reoptimized            # cold pipeline rescued it
+    assert res.fallback_reason is None
+
+
+def test_reopt_disconnected_keeps_incumbent(incumbent):
+    """A constraint set whose only connected supports are impossible
+    (zero inter-pod capacity) must keep the incumbent and say why."""
+    cs = pod_boundary_constraints(16, pods=2, dci_cap_total=0)
+    res = reoptimize_topology(incumbent, scenario="constraint", cs=cs,
+                              cfg=REOPT_CFG)
+    assert not res.reoptimized
+    assert res.topology is incumbent
+    assert res.fallback_reason is not None
+    assert res.r_asym_after == res.r_asym_before
+
+
+def test_reopt_requires_scenario_inputs(incumbent):
+    with pytest.raises(ValueError, match="node_bandwidths"):
+        reoptimize_topology(incumbent, scenario="node")
+    with pytest.raises(ValueError, match="ConstraintSet"):
+        reoptimize_topology(incumbent, scenario="constraint")
