@@ -1,0 +1,161 @@
+"""Beyond-paper: the fault-tolerant topology service under a seeded
+fault-injection mix (DESIGN.md §15).
+
+Two tracked rows:
+
+  mode=cache      the ISSUE-8 acceptance microbench at the tracked n=32
+                  config: one cold miss through the full pipeline, then a
+                  burst of identical requests answered from the canonical
+                  cache. ``cache_speedup`` (cold / hit latency) is the
+                  gated ratio — the acceptance bar is ≥ 10×.
+  mode=fault_mix  a seeded request mix over the deadline ladder: fault-free
+                  solves, NaN-returning and raising full-tier stubs, tight
+                  deadlines, malformed specs and an overload burst against a
+                  bounded queue. Tracks p50/p99 request latency, cache
+                  hit-rate, degraded-response fraction — and ``all_valid``,
+                  the service invariant itself: every response is either a
+                  release-valid topology or a structured rejection.
+
+  PYTHONPATH=src python -m benchmarks.bench_service
+  PYTHONPATH=src python -m benchmarks.bench_service --json-out rows.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import BATopoConfig
+from repro.core.guard import SolveFailure, SolveOutcome, check_invariants
+from repro.core.graph import Topology
+from repro.serve.topo_service import (
+    ServiceHooks, ServicePolicy, TopologyService, TopoRequest, TopoResponse,
+)
+
+
+def _nan_topology(n: int) -> Topology:
+    edges = [(i, (i + 1) % n) for i in range(n)]
+    return Topology(n, edges, np.full(len(edges), np.nan), name="nan-stub",
+                    meta={"connected": True})
+
+
+def bench_cache(n: int, r: int, cfg: BATopoConfig, hits: int) -> dict:
+    """Cold miss vs cache-hit latency at the tracked config."""
+    svc = TopologyService(cfg=cfg)
+    t0 = time.perf_counter()
+    cold = svc.request(n, r)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    assert cold.ok and cold.quality_tier == "full", cold.reason
+    hit_ms = []
+    for _ in range(hits):
+        t0 = time.perf_counter()
+        resp = svc.request(n, r)
+        hit_ms.append((time.perf_counter() - t0) * 1e3)
+        assert resp.ok and resp.cache_hit
+    hit_p50 = float(np.percentile(hit_ms, 50))
+    return {"bench": "service", "mode": "cache", "n": n, "r": r,
+            "runs": hits, "cold_ms": round(cold_ms, 2),
+            "hit_p50_ms": round(hit_p50, 4),
+            "cache_speedup": round(cold_ms / max(hit_p50, 1e-6), 1)}
+
+
+def bench_fault_mix(cfg: BATopoConfig, requests: int, seed: int) -> dict:
+    """Seeded fault mix through the deadline ladder + admission control."""
+    rng = np.random.default_rng(seed)
+
+    def faulty_full(req, prof):
+        from repro.core.api import optimize_topology
+
+        roll = int(rng.integers(0, 4))
+        if roll == 0:
+            return _nan_topology(int(req.n))         # garbage matrix
+        if roll == 1:
+            raise SolveFailure(SolveOutcome.NON_FINITE, "injected NaN solve")
+        if roll == 2:
+            raise RuntimeError("injected solver crash")
+        return optimize_topology(int(req.n), int(req.r), cfg=cfg,
+                                 profile=prof)        # fault-free
+
+    svc = TopologyService(cfg=cfg, policy=ServicePolicy(max_queue=8),
+                          hooks=ServiceHooks(full=faulty_full))
+    specs = [(8, 16), (8, 20), (12, 22), (12, 28)]    # small pool → real hits
+    responses: list[TopoResponse] = []
+    t_start = time.perf_counter()
+    k = 0
+    while k < requests:
+        burst = int(rng.integers(2, 13))              # overload pressure:
+        # bursts above the queue bound (8) exercise backpressure rejection
+        for _ in range(min(burst, requests - k)):
+            malformed = k % 9 == 8
+            n, r = specs[int(rng.integers(0, len(specs)))]
+            req = TopoRequest(
+                n=1 if malformed else n, r=r,
+                deadline_ms=4.0 if k % 4 == 3 else None)
+            out = svc.submit(req)
+            if isinstance(out, TopoResponse):
+                responses.append(out)
+            k += 1
+        responses.extend(svc.drain())
+    wall_s = time.perf_counter() - t_start
+
+    ok = [resp for resp in responses if resp.ok]
+    all_valid = all(
+        (resp.ok and check_invariants(resp.topology) is None)
+        or (not resp.ok and bool(resp.reason))
+        for resp in responses)
+    lat = np.array([resp.latency_ms for resp in ok]) if ok else np.zeros(1)
+    st = svc.stats
+    answered = st["cache_hits"] + st["misses"]
+    return {"bench": "service", "mode": "fault_mix", "runs": requests,
+            "answered": len(responses), "ok": len(ok),
+            "rejected_overload": st["rejected_overload"],
+            "rejected_malformed": st["rejected_malformed"],
+            "p50_ms": round(float(np.percentile(lat, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat, 99)), 3),
+            "cache_hit_rate": round(st["cache_hits"] / max(answered, 1), 3),
+            "degraded_frac": round(sum(r.degraded for r in ok)
+                                   / max(len(ok), 1), 3),
+            "all_valid": bool(all_valid),
+            "total_s": round(wall_s, 3)}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=32,
+                    help="tracked cache-microbench node count")
+    ap.add_argument("--r", type=int, default=64)
+    ap.add_argument("--hits", type=int, default=20)
+    ap.add_argument("--requests", type=int, default=48,
+                    help="fault-mix request count")
+    ap.add_argument("--sa-iters", type=int, default=150)
+    ap.add_argument("--polish-iters", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = BATopoConfig(seed=args.seed, sa_iters=args.sa_iters,
+                       polish_iters=args.polish_iters)
+    print(f"== topology service: cache microbench (n={args.n}, r={args.r}) "
+          f"+ fault-injection mix ({args.requests} requests) ==")
+
+    rows = []
+    cache_row = bench_cache(args.n, args.r, cfg, args.hits)
+    rows.append(cache_row)
+    print("  " + json.dumps(cache_row))
+
+    mix_row = bench_fault_mix(cfg, args.requests, args.seed)
+    rows.append(mix_row)
+    print("  " + json.dumps(mix_row))
+    if not mix_row["all_valid"]:
+        raise SystemExit("service invariant violated: a response was neither "
+                         "a valid topology nor a structured rejection")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

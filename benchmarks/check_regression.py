@@ -52,17 +52,22 @@ METRICS = {
     "consensus_speedup": "ratio",
     "speedup_sharded": "ratio", "ns_vs_eigh": "ratio",
     "reopt_gain": "ratio", "time_to_reopt_s": "time",
+    "cold_ms": "time", "hit_p50_ms": "time", "p50_ms": "time",
+    "p99_ms": "time", "cache_speedup": "ratio", "cache_hit_rate": "ratio",
     "r_asym_drift": "drift", "max_final_acc_drift": "drift",
-    "max_rel_curve_drift": "drift",
+    "max_rel_curve_drift": "drift", "degraded_frac": "drift",
 }
 
 #: Absolute floors below which drift comparisons are noise (the curve floor
 #: covers f32-payload fusion noise over hundreds of gossip iterations; real
 #: engine/oracle divergence shows up orders of magnitude above it).
 DRIFT_FLOORS = {"r_asym_drift": 5e-3, "max_final_acc_drift": 0.02,
-                "max_rel_curve_drift": 1e-4}
+                "max_rel_curve_drift": 1e-4,
+                # the seeded fault mix injects faults by RNG roll, so the
+                # degraded fraction wobbles a little run to run
+                "degraded_frac": 0.15}
 
-BOOL_FLAGS = ("ranking_match",)
+BOOL_FLAGS = ("ranking_match", "all_valid")
 
 
 def row_key(row: dict) -> tuple:

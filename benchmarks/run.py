@@ -48,7 +48,8 @@ def main(argv=None) -> None:
         import tempfile
 
         from . import (bench_admm, bench_chaos, bench_compression,
-                       bench_dynamic, bench_pipeline, bench_training_time)
+                       bench_dynamic, bench_pipeline, bench_service,
+                       bench_training_time)
         # Fixed, quick configuration so rows stay comparable across PRs:
         # backend×driver grid at n=16/32 + the fast-compare row at n=64,
         # the end-to-end outer-pipeline rows (device vs host phase
@@ -73,6 +74,7 @@ def main(argv=None) -> None:
                                     "--json-out", f"{td}/compression.json"])
             bench_chaos.main(["--engine", "both",
                               "--json-out", f"{td}/chaos.json"])
+            bench_service.main(["--json-out", f"{td}/service.json"])
             rows = (_json.load(open(f"{td}/admm.json"))
                     + _json.load(open(f"{td}/pipeline.json"))
                     + [r for r in _json.load(open(f"{td}/training.json"))
@@ -82,7 +84,9 @@ def main(argv=None) -> None:
                     + [r for r in _json.load(open(f"{td}/compression.json"))
                        if r.get("bench") == "compression"]
                     + [r for r in _json.load(open(f"{td}/chaos.json"))
-                       if r.get("bench") == "chaos"])
+                       if r.get("bench") == "chaos"]
+                    + [r for r in _json.load(open(f"{td}/service.json"))
+                       if r.get("bench") == "service"])
             if args.sharded:
                 from . import bench_scalability
                 bench_scalability.main(
@@ -92,7 +96,7 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             _json.dump(rows, f, indent=1)
         print("tracked ADMM + pipeline + training + dynamic + compression "
-              f"+ chaos perf rows written to {args.json}")
+              f"+ chaos + service perf rows written to {args.json}")
         return
 
     from . import (bench_admm, bench_compression, bench_consensus,
@@ -145,6 +149,11 @@ def main(argv=None) -> None:
     print("\n### bench_chaos (beyond-paper: faults + online re-optimization)")
     from . import bench_chaos
     bench_chaos.main(["--json-out", f"{ART}/chaos.json"])
+
+    print("\n### bench_service (fault-tolerant topology service, DESIGN §15)")
+    from . import bench_service
+    bench_service.main((["--n", "16", "--r", "32"] if quick else []) +
+                       ["--json-out", f"{ART}/service.json"])
 
     print("\n### bench_kernels")
     bench_kernels.main(["--json-out", f"{ART}/kernels.json"])

@@ -7,6 +7,7 @@ from .shard import resolve_partition
 from .bandwidth import PaperConstants, homo_edge_bandwidth, min_edge_bandwidth, node_hetero_edge_bandwidth, t_epoch, t_iter
 from .constraints import ConstraintSet, bcube_constraints, intra_server_constraints, node_level_constraints, pod_boundary_constraints
 from .graph import Topology, all_edges, aspl, incidence_matrix, is_connected, laplacian_from_weights, r_asym, r_asym_fast, weight_matrix_from_weights
+from .guard import GuardPolicy, LadderResult, SolveFailure, SolveOutcome, TopologyInvariantError, check_invariants, classic_fallback, classify_result, run_ladder, validate_topology
 from .reopt import DriftDetector, DriftPolicy, ReoptResult, first_drift, reoptimize_topology
 from .topologies import BASELINES, exponential, grid2d, hypercube, make_baseline, random_graph, ring, torus2d, u_equistatic
 from .warmstart import anneal_topology_batched, aspl_matmul
@@ -25,6 +26,9 @@ __all__ = [
     "Topology", "all_edges", "aspl", "incidence_matrix", "is_connected",
     "laplacian_from_weights", "r_asym", "r_asym_fast",
     "weight_matrix_from_weights",
+    "GuardPolicy", "LadderResult", "SolveFailure", "SolveOutcome",
+    "TopologyInvariantError", "check_invariants", "classic_fallback",
+    "classify_result", "run_ladder", "validate_topology",
     "DriftPolicy", "DriftDetector", "ReoptResult", "first_drift",
     "reoptimize_topology",
     "BASELINES", "exponential", "grid2d", "hypercube", "make_baseline",

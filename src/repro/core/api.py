@@ -249,6 +249,75 @@ def _finalize_batch(n: int, items: list[tuple[np.ndarray, str, dict]],
     return topos
 
 
+def _candidate_items(n: int, r: int, warms, results, cs: ConstraintSet | None,
+                     cfg: BATopoConfig, meta: dict, use_z: bool,
+                     ) -> tuple[list[tuple[np.ndarray, str, dict]], list[str]]:
+    """Phase 3 shared by ``optimize_topology`` / ``sweep_topologies`` /
+    ``serve.topo_service``: round every ADMM result (top-r support + greedy
+    feasibility repair), and enter the annealed warm starts and the feasible
+    classic baselines as competing candidates. Returns the ``(sel, name,
+    meta)`` items for ``_finalize_batch`` plus a parallel provenance list."""
+    items: list[tuple[np.ndarray, str, dict]] = []
+    sources: list[str] = []
+    edge_ok = (np.asarray(cs.edge_ok)
+               if (use_z and cs is not None) else None)
+    for (g0, z0, lam0), res in zip(warms, results):
+        score = res.g + res.g_raw
+        if use_z:
+            sel = extract_support(n, score, r, cfg.support_tol, z=res.z,
+                                  edge_ok=edge_ok)
+        else:
+            sel = extract_support(n, score, r, cfg.support_tol)
+        sel = repair_selection(n, sel, score, cs)
+        items.append((sel, f"ba-topo(n={n},r={r})", {**meta,
+                      "admm_iters": res.iters, "admm_residual": res.residual,
+                      "lam_tilde": res.lam_tilde}))
+        sources.append("admm")
+        items.append((z0.astype(bool), f"ba-topo(n={n},r={r},warm)",
+                      dict(meta)))
+        sources.append("warm-start")
+    for base_name, sel in _classic_candidates(n, r, cs):
+        items.append((sel, f"ba-topo(n={n},r={r},{base_name})", dict(meta)))
+        sources.append(f"classic:{base_name}")
+    return items, sources
+
+
+def _pick_best(n: int, items, topos, sources,
+               ) -> tuple[Topology | None, float, list[str]]:
+    """Phase 5 shared by ``optimize_topology`` / ``sweep_topologies`` /
+    ``serve.topo_service``: release-validate each connected candidate
+    against the ``core.guard`` invariant checklist (finite W, symmetry,
+    row-stochasticity, connectivity) and pick the lowest r_asym among the
+    survivors, one spectral/invariant evaluation per distinct support.
+    Returns ``(best, best_val, failures)`` — ``failures`` names the
+    invariant each flunked candidate violated, so callers can raise a
+    structured error when nothing survives."""
+    from .guard import check_invariants
+
+    best: Topology | None = None
+    best_val = np.inf
+    val_cache: dict[bytes, float] = {}
+    inv_cache: dict[bytes, str | None] = {}
+    failures: list[str] = []
+    for (sel, _, _), cand, src in zip(items, topos, sources):
+        if not cand.meta.get("connected", False):
+            continue
+        key = np.asarray(sel, dtype=bool).tobytes()
+        if key not in inv_cache:
+            inv_cache[key] = check_invariants(cand)
+        bad = inv_cache[key]
+        if bad is not None:
+            failures.append(f"{cand.name}: {bad}")
+            continue
+        if key not in val_cache:
+            val_cache[key] = cand.r_asym()
+        val = val_cache[key]
+        if best is None or val < best_val:
+            cand.meta["selected_from"] = src
+            best, best_val = cand, val
+    return best, best_val, failures
+
+
 def _init_graph(n: int, r: int, scenario: str, cs: ConstraintSet | None,
                 deg_targets, cfg: BATopoConfig, restart: int):
     """Greedy feasible start graph for one restart. Returns (edges0, seed)."""
@@ -402,24 +471,8 @@ def optimize_topology(
 
     # ---- phase 3: rounding + greedy feasibility repair --------------------
     t0 = time.perf_counter()
-    items: list[tuple[np.ndarray, str, dict]] = []
-    sources: list[str] = []
-    for (g0, z0, lam0), res in zip(warms, results):
-        if scenario == "homo":
-            sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)
-        else:
-            sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol, z=res.z,
-                                  edge_ok=np.asarray(cs.edge_ok))
-        sel = repair_selection(n, sel, res.g + res.g_raw, cs)
-        items.append((sel, f"ba-topo(n={n},r={r})", {**meta,
-                      "admm_iters": res.iters, "admm_residual": res.residual,
-                      "lam_tilde": res.lam_tilde}))
-        sources.append("admm")
-        items.append((z0.astype(bool), f"ba-topo(n={n},r={r},warm)", dict(meta)))
-        sources.append("warm-start")
-    for base_name, sel in _classic_candidates(n, r, cs):
-        items.append((sel, f"ba-topo(n={n},r={r},{base_name})", dict(meta)))
-        sources.append(f"classic:{base_name}")
+    items, sources = _candidate_items(n, r, warms, results, cs, cfg, meta,
+                                      use_z=(scenario != "homo"))
     prof["round_s"] = prof.get("round_s", 0.0) + time.perf_counter() - t0
 
     # ---- phase 4: weight polish, all candidates in one batched call -------
@@ -427,22 +480,20 @@ def optimize_topology(
     topos = _finalize_batch(n, items, cfg, cs)
     prof["polish_s"] = prof.get("polish_s", 0.0) + time.perf_counter() - t0
 
-    # ---- phase 5: spectral evaluation (one r_asym per distinct support) ---
+    # ---- phase 5: release validation + spectral evaluation (one invariant
+    # check and one r_asym per distinct support) ----------------------------
     t0 = time.perf_counter()
-    best_topo: Topology | None = None
-    best_val = np.inf
-    val_cache: dict[bytes, float] = {}
-    for (sel, _, _), cand, src in zip(items, topos, sources):
-        if not cand.meta.get("connected", False):
-            continue
-        key = np.asarray(sel, dtype=bool).tobytes()
-        if key not in val_cache:
-            val_cache[key] = cand.r_asym()
-        val = val_cache[key]
-        if best_topo is None or val < best_val:
-            cand.meta["selected_from"] = src
-            best_topo, best_val = cand, val
+    best_topo, best_val, failures = _pick_best(n, items, topos, sources)
     if best_topo is None:
+        if failures:
+            from .guard import TopologyInvariantError
+
+            bad = failures[0].rsplit(": ", 1)[-1]
+            raise TopologyInvariantError(
+                f"no candidate topology for n={n}, r={r}, "
+                f"scenario={scenario!r} passed release validation — first "
+                f"failure: {failures[0]!r} (all: {failures})",
+                invariant=bad, failures=failures)
         raise ValueError(
             f"failed to construct any connected topology for n={n}, r={r}, "
             f"scenario={scenario!r} — every candidate (ADMM, warm starts, "
@@ -549,33 +600,20 @@ def sweep_topologies(
                 r_cap=max(rs_n)) for k, rn in enumerate(rs_n)]
         else:
             results = solve_sweep_spec(spec, np.asarray(rs_n), batched, cfg.admm)
-        for (r_req, r, (g0, z0, lam0), res) in zip(rs_req, rs_n, warms, results):
+        for (r_req, r, warm, res) in zip(rs_req, rs_n, warms, results):
             meta = {"scenario": "homo", "r": r}
-            sel = extract_support(n, res.g + res.g_raw, r, cfg.support_tol)
-            sel = repair_selection(n, sel, res.g + res.g_raw, None)
-            items = [(sel, f"ba-topo(n={n},r={r})",
-                      {**meta, "admm_iters": res.iters,
-                       "admm_residual": res.residual,
-                       "lam_tilde": res.lam_tilde}),
-                     (z0.astype(bool), f"ba-topo(n={n},r={r},warm)", dict(meta))]
-            sources = ["admm", "warm-start"]
-            for base_name, csel in _classic_candidates(n, r, None):
-                items.append((csel, f"ba-topo(n={n},r={r},{base_name})",
-                              dict(meta)))
-                sources.append(f"classic:{base_name}")
+            items, sources = _candidate_items(n, r, [warm], [res], None, cfg,
+                                              meta, use_z=False)
             topos = _finalize_batch(n, items, cfg, None)
-            best, best_val = None, np.inf
-            val_cache: dict[bytes, float] = {}
-            for (csel, _, _), cand, src in zip(items, topos, sources):
-                if not cand.meta.get("connected", False):
-                    continue
-                key = np.asarray(csel, dtype=bool).tobytes()
-                if key not in val_cache:
-                    val_cache[key] = cand.r_asym()
-                val = val_cache[key]
-                if best is None or val < best_val:
-                    cand.meta["selected_from"] = src
-                    best, best_val = cand, val
+            best, best_val, failures = _pick_best(n, items, topos, sources)
+            if best is None and failures:
+                from .guard import TopologyInvariantError
+
+                bad = failures[0].rsplit(": ", 1)[-1]
+                raise TopologyInvariantError(
+                    f"no candidate topology for n={n}, r={r} passed release "
+                    f"validation — first failure: {failures[0]!r} "
+                    f"(all: {failures})", invariant=bad, failures=failures)
             if best is not None:
                 best.meta["r_asym"] = best_val
             out[(n, r_req)] = best  # keyed by the *requested* budget

@@ -113,6 +113,13 @@ class ADMMConfig:
     edge_kernel: bool = False     # route L(g)/quadform through the Pallas pair
     # -- multi-device layout (core.shard, DESIGN.md §13) --------------------
     partition: str = "none"       # none | edges | instances | auto
+    # -- solver guard (core.guard, DESIGN.md §15) ---------------------------
+    # A NaN/Inf squared primal residual can never recover (every later step
+    # propagates it), so the chunked-scan driver treats non-finite exactly
+    # like convergence and skips the remaining chunks instead of burning the
+    # iteration budget on poisoned state. On fault-free runs the extra
+    # predicate never fires and the trajectory is bit-exact (tested).
+    abort_nonfinite: bool = True
 
 
 @dataclass
@@ -593,7 +600,8 @@ def init_state(spec: ProblemSpec, g: jnp.ndarray, lam0,
 # =========================================================================
 
 def _run_chunks(spec: ProblemSpec, state0: ADMMState, max_iters: int,
-                check_every: int, eps: float, backend: str):
+                check_every: int, eps: float, backend: str,
+                abort_nonfinite: bool = True):
     """Device-resident driver: scan over chunks of ``check_every`` steps
     (the last chunk is shortened so exactly ``max_iters`` iterations run).
 
@@ -601,6 +609,13 @@ def _run_chunks(spec: ProblemSpec, state0: ADMMState, max_iters: int,
     skips the remaining chunks via ``lax.cond`` (under ``vmap`` the cond
     lowers to a select, so batched solves run all chunks — still one
     device call for the whole batch). History ys: (it, res, λ̃) per chunk.
+
+    ``abort_nonfinite`` (the solver-guard flag, DESIGN.md §15) adds a
+    non-finite test to the same on-device check: a NaN/Inf residual marks
+    the carry done so the remaining chunks are skipped — the poisoned
+    residual survives into the result, where ``core.guard`` classifies it
+    as ``non_finite``. The predicate never fires on finite trajectories,
+    so the fault-free path is bit-exact with the flag off (tested).
     """
     n_chunks = -(-max_iters // check_every)
     last = max_iters - check_every * (n_chunks - 1)
@@ -621,6 +636,8 @@ def _run_chunks(spec: ProblemSpec, state0: ADMMState, max_iters: int,
         st2, res2 = lax.cond(done, lambda op: op, one_chunk, (st, res))
         it2 = jnp.where(done, it, it + clen)
         done2 = done | (res2 < eps)
+        if abort_nonfinite:
+            done2 = done2 | ~jnp.isfinite(res2)
         return (st2, it2, res2, done2), (it2, res2, st2.X[0][-1])
 
     init = (state0, jnp.asarray(0, dtype=jnp.int64), jnp.asarray(jnp.inf),
@@ -629,23 +646,31 @@ def _run_chunks(spec: ProblemSpec, state0: ADMMState, max_iters: int,
     return st, it, res, hist
 
 
-@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend"))
-def _solve_device(spec, state0, max_iters, check_every, eps, backend):
-    return _run_chunks(spec, state0, max_iters, check_every, eps, backend)
+@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend",
+                                   "abort_nonfinite"))
+def _solve_device(spec, state0, max_iters, check_every, eps, backend,
+                  abort_nonfinite=True):
+    return _run_chunks(spec, state0, max_iters, check_every, eps, backend,
+                       abort_nonfinite)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend"))
-def _solve_device_batched(spec, states, max_iters, check_every, eps, backend):
+@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend",
+                                   "abort_nonfinite"))
+def _solve_device_batched(spec, states, max_iters, check_every, eps, backend,
+                          abort_nonfinite=True):
     return jax.vmap(
-        lambda st: _run_chunks(spec, st, max_iters, check_every, eps, backend)
+        lambda st: _run_chunks(spec, st, max_iters, check_every, eps, backend,
+                               abort_nonfinite)
     )(states)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend"))
-def _solve_device_sweep(spec, rs, rhos, states, max_iters, check_every, eps, backend):
+@partial(jax.jit, static_argnames=("max_iters", "check_every", "eps", "backend",
+                                   "abort_nonfinite"))
+def _solve_device_sweep(spec, rs, rhos, states, max_iters, check_every, eps,
+                        backend, abort_nonfinite=True):
     def one(r, rho, st):
         return _run_chunks(spec.replace(r=r, rho=rho), st, max_iters,
-                           check_every, eps, backend)
+                           check_every, eps, backend, abort_nonfinite)
 
     return jax.vmap(one)(rs, rhos, states)
 
@@ -683,7 +708,8 @@ def solve_spec(spec: ProblemSpec, state0: ADMMState, cfg: ADMMConfig) -> ADMMRes
     max_iters, chunk = _chunk_plan(cfg)
     st, it, res, hist = _solve_device(
         spec, state0, max_iters=max_iters, check_every=chunk,
-        eps=cfg.eps, backend=cfg.solver)
+        eps=cfg.eps, backend=cfg.solver,
+        abort_nonfinite=cfg.abort_nonfinite)
     history = _history_list(*hist)
     if cfg.verbose:
         tag = "admm-het" if spec.hetero else "admm-homo"
@@ -699,7 +725,8 @@ def solve_batched_spec(spec: ProblemSpec, states: ADMMState,
     max_iters, chunk = _chunk_plan(cfg)
     sts, its, ress, hists = _solve_device_batched(
         spec, states, max_iters=max_iters, check_every=chunk,
-        eps=cfg.eps, backend=cfg.solver)
+        eps=cfg.eps, backend=cfg.solver,
+        abort_nonfinite=cfg.abort_nonfinite)
     batch = int(np.asarray(its).shape[0])
     out = []
     for b in range(batch):
@@ -722,7 +749,8 @@ def solve_sweep_spec(spec: ProblemSpec, rs, states: ADMMState, cfg: ADMMConfig,
     max_iters, chunk = _chunk_plan(cfg)
     sts, its, ress, hists = _solve_device_sweep(
         spec, rs, rhos, states, max_iters=max_iters, check_every=chunk,
-        eps=cfg.eps, backend=cfg.solver)
+        eps=cfg.eps, backend=cfg.solver,
+        abort_nonfinite=cfg.abort_nonfinite)
     out = []
     for b in range(int(rs.shape[0])):
         st_b = jax.tree.map(lambda a: a[b], sts)
@@ -764,6 +792,8 @@ def solve_python(spec: ProblemSpec, state0: ADMMState, cfg: ADMMConfig,
                 print(f"[{tag}] it={it} res={res:.3e} lam~={float(state.X[0][-1]):.4f}")
         if res < cfg.eps:
             break
+        if cfg.abort_nonfinite and not np.isfinite(res):
+            break  # poisoned state can never recover (core.guard classifies)
     return _result_from(spec, state, it, res, history)
 
 

@@ -7,15 +7,17 @@ fires when either moves past the ``DriftPolicy`` thresholds. On a trigger,
 ``reoptimize_topology`` re-runs the ADMM pipeline **warm-started from the
 incumbent support** — ``g0``/``z0``/``lam0`` packed from the live topology
 exactly the way the cold pipeline packs its annealed warm starts — under
-the drifted ``ConstraintSet``, with a retry/fallback ladder:
+the drifted ``ConstraintSet``, with a retry/fallback ladder (run through
+the shared ``core.guard`` ladder runner — reopt and the topology service
+classify and recover from solver failures via one code path, DESIGN.md §15):
 
-  attempt 1  warm ADMM from the incumbent support (cheap: the solve starts
-             at a feasible, near-optimal point and usually just re-rounds),
-  attempt 2  the full cold pipeline (``optimize_topology``: SA warm start,
-             restarts, classic baselines) if the warm solve fails to
-             converge or rounds to a disconnected support,
-  fallback   keep the incumbent and report why — a degraded-but-connected
-             topology beats a "better" one that never materialized.
+  rung "warm"  warm ADMM from the incumbent support (cheap: the solve starts
+               at a feasible, near-optimal point and usually just re-rounds),
+  rung "cold"  the full cold pipeline (``optimize_topology``: SA warm start,
+               restarts, classic baselines) if the warm solve fails to
+               converge or rounds to a disconnected support,
+  fallback     keep the incumbent and report why — a degraded-but-connected
+               topology beats a "better" one that never materialized.
 
 ``time_to_reoptimized_topology`` (seconds of wall time from trigger to an
 adopted topology) is a first-class output: under churn the metric that
@@ -29,12 +31,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .api import (
-    BATopoConfig, _make_solver, _pack_warm, extract_support, repair_selection,
-)
+from .api import BATopoConfig, _pack_warm
 from .constraints import ConstraintSet
-from .graph import Topology, all_edges, is_connected
-from .weights import metropolis_weights, polish_weights
+from .graph import Topology
+from .guard import GuardPolicy, attempt_admm, run_ladder
 
 __all__ = ["DriftPolicy", "DriftDetector", "ReoptResult",
            "reoptimize_topology", "first_drift"]
@@ -128,26 +128,6 @@ class ReoptResult:
     meta: dict = field(default_factory=dict)
 
 
-def _round_to_topology(n: int, r: int, res, cs: ConstraintSet | None,
-                       cfg: BATopoConfig, name: str) -> Topology | None:
-    """ADMM result → rounded, repaired, polished Topology (None if the
-    repaired support is disconnected — the fallback-ladder signal)."""
-    score = res.g + res.g_raw
-    edge_ok = np.asarray(cs.edge_ok) if cs is not None else None
-    sel = extract_support(n, score, r, cfg.support_tol, z=res.z,
-                          edge_ok=edge_ok)
-    sel = repair_selection(n, sel, score, cs)
-    edges_full = all_edges(n)
-    edges = [edges_full[ln] for ln in np.nonzero(sel)[0]]
-    if not edges or not is_connected(n, edges):
-        return None
-    g = polish_weights(n, edges, metropolis_weights(n, edges),
-                       iters=cfg.polish_iters)
-    return Topology(n, edges, g, name=name,
-                    meta={"connected": True, "admm_iters": res.iters,
-                          "admm_residual": res.residual})
-
-
 def reoptimize_topology(
     incumbent: Topology,
     scenario: str = "homo",
@@ -203,50 +183,32 @@ def reoptimize_topology(
         live_edges = incumbent.edges        # fall back to the full support
 
     r_before = incumbent.r_asym()
-    attempts = 0
-    candidate: Topology | None = None
-    fallback_reason: str | None = None
 
-    # ---- attempt 1: warm ADMM from the incumbent support ------------------
-    try:
-        attempts += 1
-        g0, z0, lam0 = _pack_warm(n, live_edges)
-        solver = _make_solver(n, r, scenario, cs, cfg)
-        if scenario == "homo":
-            res = solver.solve(g0=g0, lam0=lam0)
-        else:
-            res = solver.solve(g0=g0, z0=z0, lam0=lam0)
-        if not np.isfinite(res.residual) or res.residual > policy.max_residual:
-            fallback_reason = f"warm re-solve non-convergent (residual={res.residual:.3g})"
-        else:
-            candidate = _round_to_topology(
-                n, r, res, cs, cfg, f"ba-topo(n={n},r={r},reopt-warm)")
-            if candidate is None:
-                fallback_reason = "warm re-solve rounded to a disconnected support"
-    except Exception as exc:  # noqa: BLE001 — any solver failure → next rung
-        fallback_reason = f"warm re-solve raised {type(exc).__name__}: {exc}"
+    # ---- shared guard ladder: warm → cold (keep-incumbent is OUR fallback)
+    guard_policy = GuardPolicy(max_residual=policy.max_residual,
+                               warm_retries=0)
+    warm = _pack_warm(n, live_edges)
 
-    # ---- attempt 2: full cold pipeline ------------------------------------
-    if candidate is None:
+    def _cold():
         from .api import optimize_topology
 
-        try:
-            attempts += 1
-            candidate = optimize_topology(
-                n, r, scenario=scenario, cs=cs,
-                node_bandwidths=node_bandwidths, cfg=cfg)
-            if not candidate.meta.get("connected", True):
-                candidate = None
-        except (ValueError, RuntimeError) as exc:
-            candidate = None
-            fallback_reason = (fallback_reason or "") + \
-                f"; cold pipeline failed: {exc}"
+        cand = optimize_topology(n, r, scenario=scenario, cs=cs,
+                                 node_bandwidths=node_bandwidths, cfg=cfg)
+        return cand if cand.meta.get("connected", True) else None
+
+    ladder = run_ladder([
+        ("warm", lambda: attempt_admm(
+            n, r, scenario, cs, cfg, warm,
+            f"ba-topo(n={n},r={r},reopt-warm)", guard_policy)),
+        ("cold", _cold),
+    ])
+    candidate = ladder.topology
 
     elapsed = time.perf_counter() - t_start
     if candidate is None:
-        reason = fallback_reason or "no connected candidate"
         return ReoptResult(topology=incumbent, reoptimized=False,
-                           attempts=attempts, fallback_reason=reason,
+                           attempts=ladder.attempts,
+                           fallback_reason=ladder.reason or "no connected candidate",
                            time_to_reopt_s=elapsed,
                            r_asym_before=r_before, r_asym_after=r_before,
                            meta=meta)
@@ -256,7 +218,7 @@ def reoptimize_topology(
     candidate.meta["r_asym"] = r_after
     candidate.meta["time_to_reopt_s"] = elapsed
     return ReoptResult(topology=candidate, reoptimized=True,
-                       attempts=attempts, fallback_reason=None,
+                       attempts=ladder.attempts, fallback_reason=None,
                        time_to_reopt_s=elapsed,
                        r_asym_before=r_before, r_asym_after=r_after,
                        meta=meta)

@@ -164,7 +164,7 @@ def _get_runner(meta: tuple):
     the parity tests in tests/test_admm_sharding.py hold the pair together."""
     (n, m, m_loc, q, hetero, equality, dtype, psd_backend, psd_iters,
      precond, cg_inexact, cg_tol, cg_maxiter, r_cap, max_iters, check_every,
-     eps, ndev) = meta
+     eps, abort_nonfinite, ndev) = meta
     dt = jnp.dtype(dtype)
     m_pad = ndev * m_loc
     rows_loc = -(-n // ndev)
@@ -385,6 +385,8 @@ def _get_runner(meta: tuple):
             st2, res2 = lax.cond(done, lambda op: op, one_chunk, (st, res))
             it2 = jnp.where(done, it, it + clen)
             done2 = done | (res2 < eps)
+            if abort_nonfinite:  # solver guard (engine._run_chunks parity)
+                done2 = done2 | ~jnp.isfinite(res2)
             return (st2, it2, res2, done2), (it2, res2, st2.X[1])
 
         init = (st0, jnp.asarray(0, dtype=jnp.int64), jnp.asarray(jnp.inf),
@@ -490,7 +492,7 @@ def solve_spec_sharded(spec: ProblemSpec, state0: ADMMState, cfg: ADMMConfig,
             spec.psd_backend, spec.psd_iters,
             "jacobi" if spec.jd is not None else "none",
             spec.cg_inexact, spec.cg_tol, spec.cg_maxiter, r_cap,
-            max_iters, chunk, cfg.eps, ndev)
+            max_iters, chunk, cfg.eps, cfg.abort_nonfinite, ndev)
     runner = _get_runner(meta)
     ed, rd = _edge_repl_data(spec, m_pad)
     sst, it, res, hist = runner(ed, rd, _split_state(spec, state0, m_pad))

@@ -1,4 +1,5 @@
-"""Batched KV-cache serving engine (prefill + single-token decode steps)."""
+"""Serving runtimes: the batched KV-cache decode engine and the
+fault-tolerant topology-optimization service (DESIGN.md §15)."""
 from .engine import (
     DecodeState,
     ServeConfig,
@@ -7,6 +8,16 @@ from .engine import (
     make_functional_serve_step,
     make_serve_step,
 )
+from .topo_service import (
+    QUALITY_TIERS,
+    ServiceHooks,
+    ServicePolicy,
+    TopologyService,
+    TopoRequest,
+    TopoResponse,
+)
 
 __all__ = ["DecodeState", "ServeConfig", "ServingEngine", "greedy_sample",
-           "make_functional_serve_step", "make_serve_step"]
+           "make_functional_serve_step", "make_serve_step",
+           "QUALITY_TIERS", "ServiceHooks", "ServicePolicy",
+           "TopologyService", "TopoRequest", "TopoResponse"]

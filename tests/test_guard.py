@@ -1,0 +1,224 @@
+"""Solver guard layer: outcome classification, invariants, the shared
+retry ladder, and the engine's non-finite early-abort (DESIGN.md §15)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.api import BATopoConfig, _pack_warm, optimize_topology
+from repro.core.engine import ADMMConfig, init_state, make_homo_spec, solve_spec
+from repro.core.graph import Topology
+from repro.core.guard import (
+    GuardPolicy, LadderResult, SolveFailure, SolveOutcome,
+    TopologyInvariantError, attempt_admm, check_invariants, classic_fallback,
+    classify_result, jittered_warm_rungs, run_ladder, validate_topology,
+)
+from repro.core.topologies import ring
+from repro.core.weights import metropolis_weights
+
+FAST_ADMM = ADMMConfig(max_iters=120, check_every=30)
+NAN_ADMM = dataclasses.replace(FAST_ADMM, rho=float("nan"))
+
+
+def _ring_topo(n: int = 8) -> Topology:
+    base = ring(n)
+    return Topology(n, base.edges, metropolis_weights(n, base.edges),
+                    name="ring", meta={"connected": True})
+
+
+def _solve(n: int, r: int, cfg: ADMMConfig):
+    """One homogeneous engine solve from a ring warm start."""
+    g0, _, lam0 = _pack_warm(n, ring(n).edges)
+    spec = make_homo_spec(n, r, cfg)
+    return solve_spec(spec, init_state(spec, jnp.asarray(g0), lam0), cfg)
+
+
+# =========================================================================
+# invariant checklist
+# =========================================================================
+
+def test_check_invariants_accepts_valid_topology():
+    assert check_invariants(_ring_topo()) is None
+
+
+@pytest.mark.parametrize("mutate,expected", [
+    (lambda W: np.full_like(W, np.nan), "finite"),
+    (lambda W: W + np.triu(np.ones_like(W), 1) * 0.3, "symmetric"),
+    (lambda W: W * 0.5, "row_stochastic"),
+])
+def test_check_invariants_names_violation(mutate, expected):
+    # Topology.W is derived from (edges, g); matrix-level violations are
+    # tested through a shim exposing the attributes check_invariants reads.
+    topo = _ring_topo()
+
+    class Shim:
+        n = topo.n
+        edges = topo.edges
+        meta: dict = {}
+        W = mutate(np.array(topo.W))
+
+    assert check_invariants(Shim()) == expected
+
+
+def test_check_invariants_disconnected():
+    n = 6
+    edges = [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)]  # two triangles
+    topo = Topology(n, edges, metropolis_weights(n, edges), name="split",
+                    meta={"connected": False})
+    assert check_invariants(topo) == "connected"
+
+
+def test_validate_topology_raises_structured_error():
+    n = 6
+    edges = [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)]
+    topo = Topology(n, edges, metropolis_weights(n, edges), name="split")
+    with pytest.raises(TopologyInvariantError) as ei:
+        validate_topology(topo, context="unit test")
+    assert ei.value.invariant == "connected"
+    assert "connected" in str(ei.value)
+
+
+# =========================================================================
+# non-finite early-abort + classification
+# =========================================================================
+
+def test_nan_solve_classified_non_finite_and_aborts_early():
+    """A NaN ρ poisons the first chunk; the scan driver must stop at the
+    first convergence check instead of burning the full budget, and the
+    classifier must call the result non_finite."""
+    res = _solve(8, 12, NAN_ADMM)
+    assert classify_result(res) is SolveOutcome.NON_FINITE
+    assert res.iters <= NAN_ADMM.check_every  # early-abort, not max_iters
+
+
+def test_abort_nonfinite_fault_free_paths_bit_exact():
+    """With finite inputs the abort predicate never fires: trajectories with
+    the guard on and off are bit-identical."""
+    cfg_on = dataclasses.replace(FAST_ADMM, abort_nonfinite=True)
+    cfg_off = dataclasses.replace(FAST_ADMM, abort_nonfinite=False)
+    res_on = _solve(10, 16, cfg_on)
+    res_off = _solve(10, 16, cfg_off)
+    assert res_on.iters == res_off.iters
+    np.testing.assert_array_equal(res_on.g, res_off.g)
+    np.testing.assert_array_equal(res_on.g_raw, res_off.g_raw)
+    assert res_on.residual == res_off.residual
+
+
+def test_classify_result_thresholds():
+    res = _solve(8, 12, FAST_ADMM)
+    assert classify_result(res, max_residual=np.inf) is SolveOutcome.CONVERGED
+    assert classify_result(res, max_residual=0.0) is SolveOutcome.NON_CONVERGENT
+
+
+def test_attempt_admm_nan_raises_classified_failure():
+    n, r = 8, 12
+    cfg = BATopoConfig(sa_iters=50, polish_iters=50,
+                       admm=NAN_ADMM)
+    warm = _pack_warm(n, ring(n).edges)
+    with pytest.raises(SolveFailure) as ei:
+        attempt_admm(n, r, "homo", None, cfg, warm, "t")
+    assert ei.value.outcome is SolveOutcome.NON_FINITE
+
+
+# =========================================================================
+# the ladder
+# =========================================================================
+
+def test_run_ladder_falls_through_to_valid_rung():
+    calls = []
+
+    def bad():
+        calls.append("bad")
+        raise SolveFailure(SolveOutcome.NON_FINITE, "injected")
+
+    def none_rung():
+        calls.append("none")
+        return None
+
+    def good():
+        calls.append("good")
+        return _ring_topo()
+
+    res = run_ladder([("nan", bad), ("empty", none_rung), ("classic", good)])
+    assert isinstance(res, LadderResult)
+    assert res.rung == "classic" and res.attempts == 3
+    assert calls == ["bad", "none", "good"]
+    assert [r.outcome for r in res.reports] == ["non_finite", "none", "ok"]
+    assert "non_finite" in res.reason and "injected" in res.reason
+
+
+def test_run_ladder_rejects_invalid_topology_and_never_raises():
+    n = 6
+    split = Topology(n, [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)],
+                     metropolis_weights(n, [(0, 1), (1, 2), (0, 2),
+                                            (3, 4), (4, 5), (3, 5)]),
+                     name="split", meta={"connected": True})
+
+    def explode():
+        raise RuntimeError("boom")
+
+    res = run_ladder([("invalid", lambda: split), ("raise", explode)])
+    assert res.topology is None and res.rung is None
+    assert res.reports[0].outcome == "invalid:connected"
+    assert res.reports[1].outcome == "error:RuntimeError"
+
+
+def test_nan_solve_rescued_by_ladder_fallback():
+    """The ISSUE acceptance path: a NaN-injected solve is classified
+    non_finite and the ladder still delivers a valid topology."""
+    n, r = 8, 12
+    cfg = BATopoConfig(sa_iters=50, polish_iters=50, admm=NAN_ADMM)
+    warm = _pack_warm(n, ring(n).edges)
+    policy = GuardPolicy(warm_retries=1)
+    rungs = jittered_warm_rungs(n, r, "homo", None, cfg, warm, "t", policy)
+    rungs.append(("classic", lambda: classic_fallback(n, r)))
+    res = run_ladder(rungs)
+    assert res.rung == "classic"
+    assert all(rep.outcome == "non_finite" for rep in res.reports[:-1])
+    assert check_invariants(res.topology) is None
+
+
+def test_jittered_warm_rungs_rescue_without_fallback():
+    """With a finite ρ the first warm rung already succeeds — the retries
+    never run."""
+    n, r = 8, 12
+    cfg = BATopoConfig(sa_iters=50, polish_iters=50, admm=FAST_ADMM)
+    warm = _pack_warm(n, ring(n).edges)
+    rungs = jittered_warm_rungs(n, r, "homo", None, cfg, warm, "t",
+                                GuardPolicy(warm_retries=2))
+    assert len(rungs) == 3
+    res = run_ladder(rungs)
+    assert res.rung == "warm" and res.attempts == 1
+    assert check_invariants(res.topology) is None
+
+
+# =========================================================================
+# classic fallback + release validation
+# =========================================================================
+
+def test_classic_fallback_valid_and_budgeted():
+    topo = classic_fallback(8, 12)
+    assert check_invariants(topo) is None
+    assert len(topo.edges) <= 12
+
+
+def test_classic_fallback_ring_of_last_resort_notes_violation():
+    # r below any classic's edge count: the terminal ring still answers
+    # but records what it violates.
+    topo = classic_fallback(8, 7)
+    assert check_invariants(topo) is None
+    assert "violates" in topo.meta
+
+
+def test_optimize_topology_release_validated():
+    """The happy path passes release validation (the checklist runs inside
+    phase 5 now) and the returned matrix satisfies every invariant."""
+    topo = optimize_topology(12, 18, cfg=BATopoConfig(sa_iters=50,
+                                                      polish_iters=50))
+    assert check_invariants(topo) is None
+    W = np.asarray(topo.W)
+    assert np.all(np.isfinite(W))
+    np.testing.assert_allclose(W, W.T, atol=1e-8)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
