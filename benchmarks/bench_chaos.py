@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from repro.core import BATopoConfig
 from repro.core.reopt import DriftDetector, DriftPolicy, reoptimize_topology
 from repro.data import class_balanced_partition, make_classification_data
-from repro.dsgd.chaos import make_chaos
+from repro.dsgd.chaos import drift_profile, make_chaos
 from repro.dsgd.dynamic import static_cycle
 from repro.dsgd.sim import (
     CommSpec,
@@ -50,15 +50,6 @@ from repro.dsgd.sim import (
 from .common import NODE_BW_16, ba_topo, chaos_step_times
 
 DENSE = CommSpec()
-
-
-def drift_profile(steps: int, n: int, drift_step: int, bw0: np.ndarray,
-                  slow_nodes: int, slow_bw: float) -> np.ndarray:
-    """(T, n) bandwidth profile: bw0 until ``drift_step``, then the first
-    ``slow_nodes`` nodes collapse to ``slow_bw`` GB/s for good."""
-    prof = np.broadcast_to(bw0, (steps, n)).copy()
-    prof[drift_step:, :slow_nodes] = slow_bw
-    return prof
 
 
 def build_chaos(steps: int, n: int, drift_step: int, bw0: np.ndarray,

@@ -1,0 +1,266 @@
+"""Beyond-paper: elastic real-model training — static incumbent vs the
+elastic runtime (watchdog + freeze/renorm + live re-optimization) under
+churn, packet loss, stragglers and a NIC collapse (DESIGN.md §16).
+
+Unlike bench_chaos (simulated softmax workers), this drives the REAL model
+zoo path: the reduced smollm config trains over the stacked n-worker gossip
+loop with the fault tensors applied inside one jitted elastic step. One
+tracked scenario (node-hetero n=8, mid-run NIC collapse + one churn window
++ packet loss + stragglers) enters two runs sharing ONE compiled step:
+
+  static:   classic BSP on the incumbent — every round waits out the
+            slowest straggler, the topology rides out the drift unchanged;
+  elastic:  the watchdog drops modeled stragglers at the deadline, the
+            DriftDetector fires at the collapse, the ADMM re-solves
+            warm-started and the new graph hot-swaps in (no retrace).
+
+Both runs pay the Eq. 34 modeled round clock (per-node latencies from
+``node_step_latency_ms``); the tracked headline is ``reopt_gain`` = static
+time-to-target-loss / elastic time-to-target-loss. Two correctness columns
+ride along, gated strictly by ``check_regression``:
+
+  elastic_parity_drift  max |loss gap| of the fault-free elastic step vs
+                        the plain ``dsgd_train_step`` — must be exactly 0.0
+                        (the elastic path IS the trainer when nothing fails);
+  resume_exactness      a mid-run checkpoint (pytree + elastic extras) is
+                        restored into a fresh runtime and replayed — the
+                        loss tail must match the uninterrupted run bitwise.
+
+  PYTHONPATH=src python -m benchmarks.bench_elastic
+  PYTHONPATH=src python -m benchmarks.bench_elastic --steps 48 --json-out rows.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch, reduced_for_smoke
+from repro.data import DataConfig, synthetic_lm_batch
+from repro.dsgd import (
+    ElasticRuntime,
+    ElasticSpec,
+    drift_profile,
+    dsgd_train_step,
+    init_dsgd_state,
+    make_chaos,
+    make_elastic_train_step,
+    no_chaos,
+)
+from repro.optim import sgd_momentum
+
+from .common import ba_topo
+
+
+def build_chaos(steps: int, n: int, drift_step: int, bw0: np.ndarray, args):
+    churn = []
+    if args.churn_node >= 0:
+        t1 = min(drift_step + max(steps // 4, 2), steps)
+        churn = [(args.churn_node, drift_step, t1)]
+    prof = drift_profile(steps, n, drift_step, bw0,
+                         args.slow_nodes, args.slow_bw)
+    return make_chaos(steps, n, seed=args.seed, churn=churn,
+                      p_drop=args.p_drop, straggler_prob=args.straggler_prob,
+                      straggler_mult=args.straggler_mult, bandwidth=prof)
+
+
+def make_batch(dc, step: int, n: int):
+    per = [synthetic_lm_batch(dc, step, node=i) for i in range(n)]
+    return {k: jnp.stack([b[k] for b in per]) for k in per[0]}
+
+
+def run_elastic(cfg, spec, topo, opt_update, step_fn, state0, dc, steps,
+                *, seed, save_at=None, mgr=None):
+    """One elastic run; returns (losses (steps,), round_ms (steps,), es)."""
+    rt = ElasticRuntime(cfg, spec, topo, opt_update, step_fn=step_fn)
+    es = rt.make_state(topo, seed=seed)
+    state = state0
+    losses, round_ms = [], []
+    for s in range(steps):
+        batch = make_batch(dc, es.data_step, spec.chaos.n)
+        state, m, rep = rt.round(state, es, batch)
+        losses.append(np.asarray(m["loss"]))
+        round_ms.append(rep.round_ms)
+        if mgr is not None and save_at is not None and s == save_at:
+            mgr.save(state, int(state.step), extra=rt.to_extras(es))
+    return np.stack(losses), np.asarray(round_ms), es, state
+
+
+def t_target_s(losses: np.ndarray, round_ms: np.ndarray,
+               target: float) -> float:
+    """Modeled seconds until the loss first reaches ``target``."""
+    cum = np.cumsum(round_ms)
+    hit = np.nonzero(losses <= target)[0]
+    return float(cum[int(hit[0])] / 1e3) if hit.size else float("inf")
+
+
+def parity_drift(cfg, topo, opt_update, step_fn, state0, dc, n: int,
+                 steps: int) -> float:
+    """Max |loss gap| of the fault-free elastic step vs dsgd_train_step
+    over ``steps`` rounds (bit-exactness ⇒ exactly 0.0)."""
+    legacy = dsgd_train_step(cfg, topo, opt_update)
+    spec = ElasticSpec(chaos=no_chaos(steps, n), reopt=False)
+    rt = ElasticRuntime(cfg, spec, topo, opt_update, step_fn=step_fn)
+    es = rt.make_state(topo)
+    s1 = s2 = state0
+    drift = 0.0
+    for s in range(steps):
+        batch = make_batch(dc, s, n)
+        s1, m1 = legacy(s1, batch)
+        s2, m2, _ = rt.round(s2, es, batch)
+        drift = max(drift, abs(float(m1["loss"]) - float(m2["loss"])))
+    return drift
+
+
+def resume_exactness(cfg, spec, topo, opt_update, step_fn, state0, dc,
+                     steps: int, save_at: int, seed: int,
+                     ref_losses: np.ndarray) -> bool:
+    """Save at ``save_at``, restore into a FRESH runtime, replay to the end
+    — the loss tail must match the uninterrupted run bitwise."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        run_elastic(cfg, spec, topo, opt_update, step_fn, state0, dc,
+                    save_at + 1, seed=seed, save_at=save_at, mgr=mgr)
+        rt = ElasticRuntime(cfg, spec, topo, opt_update, step_fn=step_fn)
+        state, rstep, extras = mgr.restore(state0, with_extra=True)
+        if state is None:
+            return False
+        es = rt.from_extras(extras, name=topo.name)
+        for s in range(int(rstep), steps):
+            batch = make_batch(dc, es.data_step, spec.chaos.n)
+            state, m, _ = rt.round(state, es, batch)
+            if np.asarray(m["loss"]).tobytes() != ref_losses[s].tobytes():
+                return False
+    return True
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--r", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--drift-frac", type=float, default=0.25)
+    ap.add_argument("--slow-nodes", type=int, default=2,
+                    help="nodes whose NICs collapse at the drift step")
+    ap.add_argument("--slow-bw", type=float, default=1.0)
+    ap.add_argument("--churn-node", type=int, default=5,
+                    help="node that churns out at the drift step (-1: none)")
+    ap.add_argument("--p-drop", type=float, default=0.03)
+    ap.add_argument("--straggler-prob", type=float, default=0.1)
+    ap.add_argument("--straggler-mult", type=float, default=4.0)
+    ap.add_argument("--deadline-factor", type=float, default=2.0)
+    ap.add_argument("--parity-steps", type=int, default=4)
+    ap.add_argument("--resume-save-frac", type=float, default=0.5)
+    ap.add_argument("--sa-iters", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    n, steps = args.n, args.steps
+    cfg = reduced_for_smoke(get_arch(args.arch))
+    bw0 = np.array([9.76] * (n // 2) + [3.25] * (n - n // 2))
+    drift_step = max(int(steps * args.drift_frac), 1)
+    print(f"== elastic: static BSP vs elastic runtime, real model "
+          f"{cfg.name} n={n} r={args.r} steps={steps} ==")
+
+    t0 = time.time()
+    topo = ba_topo(n, args.r, "node", node_bw=bw0, seed=args.seed,
+                   sa_iters=args.sa_iters)
+    topo_s = round(time.time() - t0, 3)
+
+    opt_init, opt_update = sgd_momentum(args.lr)
+    state0 = init_dsgd_state(jax.random.PRNGKey(args.seed), cfg, n, opt_init)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch, seed=args.seed,
+                    frontend_tokens=cfg.frontend_tokens, d_model=cfg.d_model)
+    step_fn = make_elastic_train_step(cfg, opt_update)
+
+    chaos = build_chaos(steps, n, drift_step, bw0, args)
+    static_spec = ElasticSpec(chaos=chaos, drop_stragglers=False, reopt=False,
+                              deadline_factor=args.deadline_factor)
+    elastic_spec = ElasticSpec(chaos=chaos, drop_stragglers=True, reopt=True,
+                               deadline_factor=args.deadline_factor)
+
+    t0 = time.time()
+    st_loss, st_ms, st_es, _ = run_elastic(cfg, static_spec, topo, opt_update,
+                                           step_fn, state0, dc, steps,
+                                           seed=args.seed)
+    el_loss, el_ms, el_es, _ = run_elastic(cfg, elastic_spec, topo, opt_update,
+                                           step_fn, state0, dc, steps,
+                                           seed=args.seed)
+    train_s = round(time.time() - t0, 3)
+
+    target = float(max(st_loss[-1], el_loss[-1]))
+    t_static = t_target_s(st_loss, st_ms, target)
+    t_elastic = t_target_s(el_loss, el_ms, target)
+
+    t0 = time.time()
+    pdrift = parity_drift(cfg, topo, opt_update, step_fn, state0, dc, n,
+                          args.parity_steps)
+    parity_s = round(time.time() - t0, 3)
+
+    t0 = time.time()
+    save_at = max(int(steps * args.resume_save_frac), 1)
+    exact = resume_exactness(cfg, elastic_spec, topo, opt_update, step_fn,
+                             state0, dc, steps, save_at, args.seed, el_loss)
+    resume_s = round(time.time() - t0, 3)
+
+    reopt_events = [e for e in el_es.events if e["event"] == "reopt"]
+    rows = [
+        {"bench": "elastic", "scenario": "nic-collapse", "n": n,
+         "mode": "static", "final_loss": round(float(st_loss[-1]), 4),
+         "total_modeled_s": round(float(st_ms.sum() / 1e3), 2),
+         "t_target_s": round(t_static, 2)},
+        {"bench": "elastic", "scenario": "nic-collapse", "n": n,
+         "mode": "elastic", "final_loss": round(float(el_loss[-1]), 4),
+         "total_modeled_s": round(float(el_ms.sum() / 1e3), 2),
+         "t_target_s": round(t_elastic, 2),
+         "dropped_rounds": el_es.dropped_rounds, "drops": el_es.drops,
+         "reopts": el_es.reopts, "adopted": el_es.adopted},
+    ]
+    summary = {
+        "bench": "elastic", "scenario": "nic-collapse", "n": n,
+        "arch": cfg.name, "steps": steps, "drift_step": drift_step,
+        "reopts": el_es.reopts, "adopted": el_es.adopted,
+        "time_to_reopt_s": round(sum(e["time_to_reopt_s"]
+                                     for e in reopt_events), 3)
+        if reopt_events else None,
+        "static_t_target_s": round(t_static, 2),
+        "elastic_t_target_s": round(t_elastic, 2),
+        "elastic_parity_drift": pdrift,
+        "resume_exactness": bool(exact),
+        "topo_s": topo_s, "train_s": train_s,
+        "total_s": round(train_s + parity_s + resume_s, 3),
+    }
+    if np.isfinite(t_static) and np.isfinite(t_elastic) and t_elastic > 0:
+        summary["reopt_gain"] = round(t_static / t_elastic, 3)
+    rows.append(summary)
+
+    hdr = ["mode", "final_loss", "t_target_s", "total_modeled_s"]
+    print(" | ".join(f"{h:>16}" for h in hdr))
+    for row in rows[:2]:
+        print(" | ".join(f"{str(row.get(h)):>16}" for h in hdr))
+    keys = ["static_t_target_s", "elastic_t_target_s", "reopts", "adopted",
+            "elastic_parity_drift", "resume_exactness"]
+    if "reopt_gain" in summary:
+        keys.append("reopt_gain")
+    print("  " + json.dumps({k: summary[k] for k in keys}))
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

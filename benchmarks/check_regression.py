@@ -56,6 +56,7 @@ METRICS = {
     "p99_ms": "time", "cache_speedup": "ratio", "cache_hit_rate": "ratio",
     "r_asym_drift": "drift", "max_final_acc_drift": "drift",
     "max_rel_curve_drift": "drift", "degraded_frac": "drift",
+    "elastic_parity_drift": "drift",
 }
 
 #: Absolute floors below which drift comparisons are noise (the curve floor
@@ -65,9 +66,12 @@ DRIFT_FLOORS = {"r_asym_drift": 5e-3, "max_final_acc_drift": 0.02,
                 "max_rel_curve_drift": 1e-4,
                 # the seeded fault mix injects faults by RNG roll, so the
                 # degraded fraction wobbles a little run to run
-                "degraded_frac": 0.15}
+                "degraded_frac": 0.15,
+                # the fault-free elastic step is the plain trainer bit-exactly
+                # — NO floor: any nonzero loss gap is a real divergence
+                "elastic_parity_drift": 0.0}
 
-BOOL_FLAGS = ("ranking_match", "all_valid")
+BOOL_FLAGS = ("ranking_match", "all_valid", "resume_exactness")
 
 
 def row_key(row: dict) -> tuple:

@@ -48,8 +48,8 @@ def main(argv=None) -> None:
         import tempfile
 
         from . import (bench_admm, bench_chaos, bench_compression,
-                       bench_dynamic, bench_pipeline, bench_service,
-                       bench_training_time)
+                       bench_dynamic, bench_elastic, bench_pipeline,
+                       bench_service, bench_training_time)
         # Fixed, quick configuration so rows stay comparable across PRs:
         # backend×driver grid at n=16/32 + the fast-compare row at n=64,
         # the end-to-end outer-pipeline rows (device vs host phase
@@ -74,6 +74,7 @@ def main(argv=None) -> None:
                                     "--json-out", f"{td}/compression.json"])
             bench_chaos.main(["--engine", "both",
                               "--json-out", f"{td}/chaos.json"])
+            bench_elastic.main(["--json-out", f"{td}/elastic.json"])
             bench_service.main(["--json-out", f"{td}/service.json"])
             rows = (_json.load(open(f"{td}/admm.json"))
                     + _json.load(open(f"{td}/pipeline.json"))
@@ -85,6 +86,8 @@ def main(argv=None) -> None:
                        if r.get("bench") == "compression"]
                     + [r for r in _json.load(open(f"{td}/chaos.json"))
                        if r.get("bench") == "chaos"]
+                    + [r for r in _json.load(open(f"{td}/elastic.json"))
+                       if r.get("bench") == "elastic"]
                     + [r for r in _json.load(open(f"{td}/service.json"))
                        if r.get("bench") == "service"])
             if args.sharded:
@@ -96,7 +99,7 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             _json.dump(rows, f, indent=1)
         print("tracked ADMM + pipeline + training + dynamic + compression "
-              f"+ chaos + service perf rows written to {args.json}")
+              f"+ chaos + elastic + service perf rows written to {args.json}")
         return
 
     from . import (bench_admm, bench_compression, bench_consensus,
@@ -149,6 +152,10 @@ def main(argv=None) -> None:
     print("\n### bench_chaos (beyond-paper: faults + online re-optimization)")
     from . import bench_chaos
     bench_chaos.main(["--json-out", f"{ART}/chaos.json"])
+
+    print("\n### bench_elastic (elastic real-model training, DESIGN §16)")
+    from . import bench_elastic
+    bench_elastic.main(["--json-out", f"{ART}/elastic.json"])
 
     print("\n### bench_service (fault-tolerant topology service, DESIGN §15)")
     from . import bench_service

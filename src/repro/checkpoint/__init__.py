@@ -1,4 +1,11 @@
 """Checkpointing (npz-based — offline container has no orbax/msgpack)."""
-from .store import CheckpointManager, load_checkpoint, save_checkpoint
+from .store import (
+    CheckpointCorruptionWarning,
+    CheckpointError,
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "CheckpointError", "CheckpointCorruptionWarning"]

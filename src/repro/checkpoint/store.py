@@ -5,18 +5,47 @@ dict/NamedTuple/tuple round-trips without pickling (safe + portable). The
 tree *structure* is restored from a template (the freshly-initialized
 state), which is how production JAX trainers (orbax restore w/ item arg)
 behave.
+
+Beyond the model/optimizer pytree, a checkpoint can carry an ``extra``
+payload of named numpy arrays (``__extra__<name>`` keys in the archive):
+PRNG keys, data-stream positions, drift-detector baselines, elastic
+membership state — everything a crash-safe ``--resume`` needs to reproduce
+the uninterrupted run bit-exactly (DESIGN.md §16). Extras are restored
+*without* template shape-matching, because their shapes legitimately change
+across a run (a re-optimized topology has a different edge count).
+
+Failure handling (the restore path of a run that just crashed): a truncated
+or unreadable archive, or one whose leaf set no longer matches the template,
+raises :class:`CheckpointError`; ``CheckpointManager.restore`` catches it,
+emits a :class:`CheckpointCorruptionWarning` naming the file and the cause,
+and falls back to the newest older checkpoint that loads cleanly.
 """
 from __future__ import annotations
 
 import os
 import re
 import tempfile
+import warnings
+import zipfile
 
 import numpy as np
 
 import jax
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
+           "CheckpointError", "CheckpointCorruptionWarning"]
+
+_EXTRA_PREFIX = "__extra__"
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file that cannot be restored: unreadable/truncated
+    archive, or a leaf set that mismatches the restore template."""
+
+
+class CheckpointCorruptionWarning(UserWarning):
+    """Emitted when ``CheckpointManager.restore`` skips an unusable
+    checkpoint and falls back to an older one."""
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -27,11 +56,17 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return flat
 
 
-def save_checkpoint(path: str, tree, step: int | None = None) -> None:
-    """Atomic write (tmp + rename) of a pytree to ``path`` (.npz)."""
+def save_checkpoint(path: str, tree, step: int | None = None,
+                    extra: dict[str, np.ndarray] | None = None) -> None:
+    """Atomic write (tmp + rename) of a pytree to ``path`` (.npz).
+
+    ``extra``: named side-state arrays stored under reserved
+    ``__extra__<name>`` keys (restored shape-free by ``load_checkpoint``)."""
     flat = _flatten(tree)
     if step is not None:
         flat["__step__"] = np.asarray(step)
+    for k, v in (extra or {}).items():
+        flat[_EXTRA_PREFIX + k] = np.asarray(v)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".npz.tmp")
@@ -44,30 +79,49 @@ def save_checkpoint(path: str, tree, step: int | None = None) -> None:
             os.unlink(tmp)
 
 
-def load_checkpoint(path: str, template):
+def load_checkpoint(path: str, template, *, with_extra: bool = False):
     """Restore a pytree saved by save_checkpoint into ``template``'s structure.
-    Returns (tree, step|None)."""
-    with np.load(path) as z:
-        data = {k: z[k] for k in z.files}
+
+    Returns ``(tree, step|None)``, or ``(tree, step|None, extras)`` when
+    ``with_extra`` is True. Raises :class:`CheckpointError` for a truncated/
+    unreadable archive, a leaf set that mismatches the template (missing OR
+    unexpected leaves — a template drift is as unrestorable as a truncation),
+    or a per-leaf shape mismatch."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            data = {k: z[k] for k in z.files}
+    except (OSError, EOFError, ValueError, zipfile.BadZipFile) as exc:
+        raise CheckpointError(
+            f"unreadable checkpoint {path!r}: {type(exc).__name__}: {exc}"
+        ) from exc
     step = int(data.pop("__step__")) if "__step__" in data else None
-    leaves_with_paths = jax.tree_util.tree_flatten_with_path(template)
-    paths, treedef = leaves_with_paths[0], leaves_with_paths[1]
+    extras = {k[len(_EXTRA_PREFIX):]: data.pop(k)
+              for k in list(data) if k.startswith(_EXTRA_PREFIX)}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    tmpl_keys = [jax.tree_util.keystr(p) for p, _ in paths]
+    missing = [k for k in tmpl_keys if k not in data]
+    unexpected = [k for k in data if k not in set(tmpl_keys)]
+    if missing or unexpected:
+        raise CheckpointError(
+            f"checkpoint {path!r} leaf set mismatches the template: "
+            f"missing={missing or '[]'} unexpected={unexpected or '[]'}")
     new_leaves = []
-    for path_k, leaf in paths:
-        key = jax.tree_util.keystr(path_k)
-        if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
+    for (path_k, leaf), key in zip(paths, tmpl_keys):
         arr = data[key]
         if arr.shape != np.shape(leaf):
-            raise ValueError(f"shape mismatch at {key}: ckpt {arr.shape} vs template {np.shape(leaf)}")
+            raise CheckpointError(f"shape mismatch at {key} in {path!r}: "
+                                  f"ckpt {arr.shape} vs template {np.shape(leaf)}")
         new_leaves.append(arr.astype(np.asarray(leaf).dtype))
-    return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return (tree, step, extras) if with_extra else (tree, step)
 
 
 class CheckpointManager:
     """Rolling checkpoints: ckpt_<step>.npz under a directory, keep last k."""
 
     def __init__(self, directory: str, keep: int = 3):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
@@ -80,20 +134,40 @@ class CheckpointManager:
                 out.append(int(m.group(1)))
         return sorted(out)
 
-    def save(self, tree, step: int) -> str:
-        path = os.path.join(self.directory, f"ckpt_{step}.npz")
-        save_checkpoint(path, tree, step=step)
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step}.npz")
+
+    def save(self, tree, step: int,
+             extra: dict[str, np.ndarray] | None = None) -> str:
+        path = self._path(step)
+        save_checkpoint(path, tree, step=step, extra=extra)
         for s in self._steps()[:-self.keep]:
-            os.unlink(os.path.join(self.directory, f"ckpt_{s}.npz"))
+            if s != step:            # never prune what we just wrote
+                os.unlink(self._path(s))
         return path
 
     def latest_step(self) -> int | None:
         steps = self._steps()
         return steps[-1] if steps else None
 
-    def restore(self, template, step: int | None = None):
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            return None, None
-        path = os.path.join(self.directory, f"ckpt_{step}.npz")
-        return load_checkpoint(path, template)
+    def restore(self, template, step: int | None = None, *,
+                with_extra: bool = False):
+        """Restore the checkpoint at ``step`` (raises on a bad file — an
+        explicit step is an explicit ask), or the newest restorable one:
+        corrupt/truncated/mismatched archives are skipped with a
+        :class:`CheckpointCorruptionWarning` and the next older checkpoint
+        is tried. Returns ``(None, None[, {}])`` when nothing restores."""
+        none = (None, None, {}) if with_extra else (None, None)
+        if step is not None:
+            return load_checkpoint(self._path(step), template,
+                                   with_extra=with_extra)
+        for s in reversed(self._steps()):
+            try:
+                return load_checkpoint(self._path(s), template,
+                                       with_extra=with_extra)
+            except CheckpointError as exc:
+                warnings.warn(
+                    f"skipping unusable checkpoint {self._path(s)!r} ({exc}); "
+                    "falling back to the previous one",
+                    CheckpointCorruptionWarning, stacklevel=2)
+        return none

@@ -24,7 +24,9 @@ LONG_CONTEXT_ARCHS = {"mamba2-780m", "zamba2-2.7b", "gemma2-9b", "mixtral-8x22b"
 
 def get_arch(name: str) -> ModelConfig:
     if name not in ARCHS:
-        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+        raise ValueError(
+            f"unknown arch {name!r}; the config zoo has: "
+            + ", ".join(sorted(ARCHS)))
     return ARCHS[name]
 
 def shape_supported(arch: str, shape: str) -> bool:

@@ -100,6 +100,30 @@ class DriftDetector:
         self.base_bandwidth = np.asarray(bandwidth_t, np.float64).copy()
         self.base_alive = np.asarray(alive_t, np.float64).copy()
 
+    def to_state(self) -> dict[str, np.ndarray]:
+        """Named arrays capturing the detector's mutable state (baselines +
+        cooldown clock) — the checkpoint extras payload of a crash-safe
+        resume (DESIGN.md §16). ``last_trigger`` uses −1 for "never"."""
+        return {
+            "base_bandwidth": self.base_bandwidth.copy(),
+            "base_alive": self.base_alive.copy(),
+            "last_trigger": np.asarray(
+                -1 if self.last_trigger is None else self.last_trigger,
+                np.int64),
+        }
+
+    @classmethod
+    def from_state(cls, state: dict[str, np.ndarray],
+                   policy: DriftPolicy | None = None) -> "DriftDetector":
+        """Inverse of :meth:`to_state` (the policy itself is static config,
+        not state — pass the run's)."""
+        det = cls(policy or DriftPolicy(),
+                  np.asarray(state["base_bandwidth"], np.float64).copy(),
+                  np.asarray(state["base_alive"], np.float64).copy())
+        lt = int(state["last_trigger"])
+        det.last_trigger = None if lt < 0 else lt
+        return det
+
 
 def first_drift(chaos, policy: DriftPolicy | None = None,
                 start: int = 0) -> tuple[int, str] | None:

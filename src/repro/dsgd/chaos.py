@@ -41,7 +41,7 @@ import numpy as np
 import jax.numpy as jnp
 
 __all__ = ["ChaosSpec", "no_chaos", "make_chaos", "random_churn_windows",
-           "degrade_matrix"]
+           "drift_profile", "degrade_matrix"]
 
 
 @dataclass(frozen=True)
@@ -99,6 +99,17 @@ def no_chaos(steps: int, n: int, bandwidth: float = 9.76) -> ChaosSpec:
         bandwidth=np.full((steps, n), float(bandwidth), np.float64),
         meta={"faultless": True},
     )
+
+
+def drift_profile(steps: int, n: int, drift_step: int, bw0: np.ndarray,
+                  slow_nodes: int, slow_bw: float) -> np.ndarray:
+    """(T, n) bandwidth profile: ``bw0`` until ``drift_step``, then the
+    first ``slow_nodes`` nodes collapse to ``slow_bw`` GB/s for good — the
+    canonical NIC-collapse scenario shared by bench_chaos, bench_elastic
+    and the elastic tests."""
+    prof = np.broadcast_to(np.asarray(bw0, np.float64), (steps, n)).copy()
+    prof[drift_step:, :slow_nodes] = slow_bw
+    return prof
 
 
 def random_churn_windows(n: int, steps: int, events: int, seed: int = 0,

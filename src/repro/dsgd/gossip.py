@@ -15,9 +15,10 @@ import jax.numpy as jnp
 
 from .schedule import GossipSchedule
 
-__all__ = ["gossip_shard", "gossip_sim", "gossip_sim_tree",
-           "gossip_sim_tree_rowloop", "padded_neighbors",
-           "select_cycle_matrix"]
+__all__ = ["gossip_shard", "gossip_shard_elastic", "gossip_sim",
+           "gossip_sim_tree", "gossip_sim_tree_rowloop", "padded_neighbors",
+           "elastic_neighbor_tables", "gather_neighbor_weights",
+           "schedule_weight_arrays", "select_cycle_matrix"]
 
 
 def select_cycle_matrix(Wc: jnp.ndarray, R, t) -> jnp.ndarray:
@@ -48,6 +49,51 @@ def gossip_shard(tree, sched: GossipSchedule, axis):
         accs = jax.tree.map(
             lambda a, r: a + r.astype(jnp.float32) * w_recv, accs, recv)
     return jax.tree.map(lambda a, x: a.astype(x.dtype), accs, tree)
+
+
+def gossip_shard_elastic(tree, sched: GossipSchedule, axis,
+                         mix_mask: jnp.ndarray, self_weights: jnp.ndarray,
+                         recv_weights: jnp.ndarray):
+    """Elastic variant of :func:`gossip_shard` — weights and membership are
+    DATA, so a re-optimized weight polish or a membership flip never
+    retraces the step (DESIGN.md §16).
+
+    ``mix_mask (n,)``: 1 for nodes participating in this round's exchange
+    (alive and not watchdog-dropped). A non-participant's sends are weighted
+    0 by every receiver and the lost mass is folded into the receiver's self
+    weight — the on-device row-stochastic renorm of ``chaos.degrade_matrix``
+    expressed over ppermute rounds: w_self + Σ_r w_r·a_r + Σ_r w_r·(1−a_r)
+    = w_self + Σ_r w_r = 1. The non-participant's OWN row is overwritten by
+    the caller (freeze / keep-local), matching the dense engine.
+    ``self_weights (n,)`` / ``recv_weights (rounds, n)``: the schedule's
+    weights as arrays (see :func:`schedule_weight_arrays`); the perm
+    structure itself stays static — a support change still retraces.
+    """
+    i = jax.lax.axis_index(axis)
+    a_i = mix_mask[i].astype(jnp.float32)
+    w_self = self_weights[i].astype(jnp.float32)
+    accs = jax.tree.map(lambda x: x.astype(jnp.float32) * w_self, tree)
+    lost = jnp.float32(0.0)
+    for r, perm in enumerate(sched.perms):
+        w_recv = recv_weights[r][i].astype(jnp.float32)
+        a_src = jax.lax.ppermute(a_i, axis, list(perm))
+        recv = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, list(perm)), tree)
+        accs = jax.tree.map(
+            lambda a, rx: a + rx.astype(jnp.float32) * (w_recv * a_src),
+            accs, recv)
+        lost = lost + w_recv * (1.0 - a_src)
+    accs = jax.tree.map(lambda a, x: a + x.astype(jnp.float32) * lost,
+                        accs, tree)
+    return jax.tree.map(lambda a, x: a.astype(x.dtype), accs, tree)
+
+
+def schedule_weight_arrays(sched: GossipSchedule) -> tuple[np.ndarray, np.ndarray]:
+    """A schedule's weights as ``(self (n,), recv (rounds, n))`` float32
+    arrays — the data leaves :func:`gossip_shard_elastic` consumes (the
+    tuples baked into ``GossipSchedule`` are jit-static and would retrace)."""
+    return (np.asarray(sched.self_weights, np.float32),
+            np.asarray(sched.recv_weights, np.float32).reshape(
+                sched.rounds, sched.n))
 
 
 def gossip_sim(x: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
@@ -89,6 +135,50 @@ def padded_neighbors(W) -> tuple[jnp.ndarray, jnp.ndarray]:
         weights[i, 0] = Wnp[i, i]
         weights[i, 1:1 + len(r)] = off[i, r]
     return jnp.asarray(nbr_idx), jnp.asarray(weights)
+
+
+def elastic_neighbor_tables(W, deg_cap: int | None = None
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Hot-swappable neighbor indexing for the elastic kernel path.
+
+    Returns ``(nbr_idx (n, deg_cap) int32, nbr_mask (n, deg_cap) bool)`` for
+    a CONCRETE W: real neighbor slots carry the neighbor index, padded slots
+    point at the row itself with mask False. Padding every topology to the
+    same ``deg_cap`` (default n−1, every possible degree) keeps the table
+    shapes identical across re-optimized topologies, so a mid-training
+    hot-swap replaces data instead of retracing the step. Per-step weights
+    are gathered on device from the degraded matrix by
+    :func:`gather_neighbor_weights`.
+    """
+    Wnp = np.asarray(W)
+    n = Wnp.shape[0]
+    off = Wnp.copy()
+    np.fill_diagonal(off, 0.0)
+    rows = [np.nonzero(off[i])[0] for i in range(n)]
+    deg = deg_cap if deg_cap is not None else max(n - 1, 1)
+    widest = max((len(r) for r in rows), default=0)
+    if widest > deg:
+        raise ValueError(f"deg_cap={deg} < max degree {widest} of W")
+    nbr_idx = np.empty((n, deg), np.int32)
+    nbr_mask = np.zeros((n, deg), bool)
+    for i, r in enumerate(rows):
+        nbr_idx[i, :len(r)] = r
+        nbr_idx[i, len(r):] = i
+        nbr_mask[i, :len(r)] = True
+    return jnp.asarray(nbr_idx), jnp.asarray(nbr_mask)
+
+
+def gather_neighbor_weights(W_eff: jnp.ndarray, nbr_idx: jnp.ndarray,
+                            nbr_mask: jnp.ndarray) -> jnp.ndarray:
+    """(n, deg+1) float32 kernel weights gathered from a (possibly degraded)
+    mixing matrix on device — column 0 the self weight, padded slots 0, the
+    layout ``gossip_mix_batched`` consumes. Trace-safe: the fault masks and
+    the hot-swapped tables are all data."""
+    n = W_eff.shape[0]
+    rows = jnp.arange(n)[:, None]
+    w = jnp.where(nbr_mask, W_eff[rows, nbr_idx], 0.0)
+    diag = jnp.diagonal(W_eff)[:, None]
+    return jnp.concatenate([diag, w], axis=1).astype(jnp.float32)
 
 
 def gossip_sim_tree(tree, W: jnp.ndarray, *, use_kernel: bool = False,

@@ -106,20 +106,29 @@ _MEM_CACHE: dict[tuple, Topology] = {}
 
 
 def topology_for(n: int, kind: str = "ba", r: int | None = None,
-                 seed: int = 0) -> Topology:
+                 seed: int = 0,
+                 node_bw: "list[float] | None" = None) -> Topology:
     """Gossip topology over n workers. kind ∈ {"ba", "ring", "exponential",
     "u_equistatic", "torus2d", "grid2d"}; r defaults to 2n (the paper's best
-    homogeneous budget at n=16)."""
+    homogeneous budget at n=16). ``node_bw`` (BA only): per-node GB/s —
+    the solve runs the §VI-A2 node scenario (Algorithm 1 allocates edge
+    capacities to the heterogeneous NICs) instead of homogeneous."""
     r = r if r is not None else 2 * n
-    key = (n, kind, r, seed)
+    bw_key = tuple(float(b) for b in node_bw) if node_bw is not None else None
+    key = (n, kind, r, seed, bw_key)
     if key in _MEM_CACHE:
         return _MEM_CACHE[key]
+    if node_bw is not None and kind != "ba":
+        raise ValueError("node_bw is a BA-Topo (ADMM) knob — baseline "
+                         f"topologies ignore bandwidth (got kind={kind!r})")
+    if node_bw is not None and len(node_bw) != n:
+        raise ValueError(f"node_bw has {len(node_bw)} entries for n={n}")
     if n == 1:
         topo = Topology(1, [], np.zeros(0), name="singleton")
     elif n == 2:
         topo = Topology(2, [(0, 1)], np.array([0.5]), name="pair")
     elif kind == "ba":
-        topo = _cached_ba_topology(n, r, seed)
+        topo = _cached_ba_topology(n, r, seed, node_bw)
     elif kind == "random":
         topo = make_baseline(kind, n, r=r, seed=seed)
     else:
@@ -128,18 +137,26 @@ def topology_for(n: int, kind: str = "ba", r: int | None = None,
     return topo
 
 
-def _cached_ba_topology(n: int, r: int, seed: int) -> Topology:
+def _cached_ba_topology(n: int, r: int, seed: int,
+                        node_bw: "list[float] | None" = None) -> Topology:
     path = os.path.abspath(TOPO_CACHE)
     cache = {}
     if os.path.exists(path):
         with open(path) as f:
             cache = json.load(f)
     ck = f"n{n}_r{r}_s{seed}"
+    if node_bw is not None:
+        ck += "_bw" + ",".join(f"{b:g}" for b in node_bw)
     if ck in cache:
         d = cache[ck]
         return Topology(n, [tuple(e) for e in d["edges"]], np.asarray(d["g"]),
                         name=f"ba-topo(n={n},r={r})", meta=d.get("meta", {}))
-    topo = optimize_topology(n, r, "homo", cfg=BATopoConfig(seed=seed))
+    if node_bw is not None:
+        topo = optimize_topology(n, r, "node",
+                                 node_bandwidths=np.asarray(node_bw, float),
+                                 cfg=BATopoConfig(seed=seed))
+    else:
+        topo = optimize_topology(n, r, "homo", cfg=BATopoConfig(seed=seed))
     cache[ck] = {"edges": [list(e) for e in topo.edges],
                  "g": np.asarray(topo.g).tolist(),
                  "meta": {k: v for k, v in topo.meta.items()

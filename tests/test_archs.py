@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, INPUT_SHAPES, reduced_for_smoke, shape_supported
+from repro.configs import (ARCHS, INPUT_SHAPES, get_arch, reduced_for_smoke,
+                           shape_supported)
 from repro.models import decode_step, init_params, param_count, prefill, train_loss
 
 ALL_ARCHS = sorted(ARCHS)
@@ -105,6 +106,15 @@ def test_shape_matrix_declared(arch):
             cfg = ARCHS[arch]
             # only pure full-attention archs may skip long_500k
             assert cfg.arch_type not in ("ssm", "hybrid") and cfg.sliding_window == 0
+
+
+def test_get_arch_unknown_lists_the_zoo():
+    """A typo'd --arch fails with the config zoo spelled out, not a KeyError."""
+    with pytest.raises(ValueError, match="unknown arch") as exc:
+        get_arch("smollm-135M")
+    for name in ALL_ARCHS:
+        assert name in str(exc.value)
+    assert get_arch(ALL_ARCHS[0]) is ARCHS[ALL_ARCHS[0]]
 
 
 def test_full_configs_match_assignment():

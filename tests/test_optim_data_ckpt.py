@@ -9,7 +9,13 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    CheckpointCorruptionWarning,
+    CheckpointError,
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
 from repro.data import (
     DataConfig,
     class_balanced_partition,
@@ -153,3 +159,88 @@ def test_manager_keeps_last_k():
         assert files == ["ckpt_30.npz", "ckpt_40.npz"]
         restored, s = mgr.restore({"w": jnp.zeros(3)}, step=30)
         assert s == 30 and float(restored["w"][0]) == 30
+
+
+def test_manager_keep_must_be_positive():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError):
+            CheckpointManager(d, keep=0)
+
+
+def test_checkpoint_extras_roundtrip_shape_free():
+    """Extras restore without template matching — their shapes legitimately
+    change across a run (a re-optimized topology has another edge count)."""
+    tree = {"w": jnp.ones((2,))}
+    extra = {"edges": np.arange(10, dtype=np.int64).reshape(5, 2),
+             "key": np.asarray([7, 9], np.uint32),
+             "data_step": np.asarray(13, np.int64)}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.npz")
+        save_checkpoint(path, tree, step=3, extra=extra)
+        restored, step, got = load_checkpoint(path, tree, with_extra=True)
+        assert step == 3 and set(got) == set(extra)
+        for k in extra:
+            np.testing.assert_array_equal(got[k], extra[k])
+        # the extras channel is invisible to a plain (2-tuple) load
+        _, step2 = load_checkpoint(path, tree)
+        assert step2 == 3
+
+        mgr = CheckpointManager(d)
+        mgr.save(tree, 5, extra={"edges": np.zeros((7, 2), np.int64)})
+        _, s, got5 = mgr.restore(tree, with_extra=True)
+        assert s == 5 and got5["edges"].shape == (7, 2)
+
+
+def test_leaf_set_mismatch_is_checkpoint_error():
+    tree = {"w": jnp.ones((2,)), "b": jnp.zeros((1,))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.npz")
+        save_checkpoint(path, tree)
+        with pytest.raises(CheckpointError, match="missing"):
+            load_checkpoint(path, {"w": jnp.ones((2,)), "v": jnp.zeros((1,))})
+        with pytest.raises(CheckpointError, match="unexpected"):
+            load_checkpoint(path, {"w": jnp.ones((2,))})
+
+
+def test_manager_falls_back_past_corrupt_checkpoint():
+    """The restore path of a run that crashed mid-write: the newest file is
+    truncated garbage; restore warns and lands on the previous one."""
+    tmpl = {"w": jnp.zeros(3)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        mgr.save({"w": jnp.ones(3) * 1}, 1)
+        mgr.save({"w": jnp.ones(3) * 2}, 2)
+        with open(os.path.join(d, "ckpt_3.npz"), "wb") as f:
+            f.write(b"PK\x03\x04 not a real archive")
+        with pytest.warns(CheckpointCorruptionWarning):
+            restored, s = mgr.restore(tmpl)
+        assert s == 2 and float(restored["w"][0]) == 2
+        # an explicit step is an explicit ask — no silent fallback
+        with pytest.raises(CheckpointError):
+            mgr.restore(tmpl, step=3)
+
+
+def test_manager_falls_back_past_template_drift():
+    """A checkpoint from an older code version (different leaf set) is as
+    unrestorable as a truncated one — skip it, warn, keep looking."""
+    tmpl = {"w": jnp.zeros(3)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save({"w": jnp.ones(3) * 7}, 1)
+        save_checkpoint(os.path.join(d, "ckpt_2.npz"),
+                        {"w": jnp.ones(3), "stale_extra_leaf": jnp.ones(1)},
+                        step=2)
+        with pytest.warns(CheckpointCorruptionWarning):
+            restored, s = mgr.restore(tmpl)
+        assert s == 1 and float(restored["w"][0]) == 7
+
+
+def test_manager_all_corrupt_returns_none():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        for s in (1, 2):
+            with open(os.path.join(d, f"ckpt_{s}.npz"), "wb") as f:
+                f.write(b"junk")
+        with pytest.warns(CheckpointCorruptionWarning):
+            out = mgr.restore({"w": jnp.zeros(3)}, with_extra=True)
+        assert out == (None, None, {})
