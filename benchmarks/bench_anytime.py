@@ -1,0 +1,154 @@
+"""Anytime-pipeline benchmark: time-to-first-usable vs the barrier (DESIGN §17).
+
+Two tracked comparisons at the ISSUE-3 acceptance point (n=64, 4 restarts):
+
+  mode "first"   how long until the AnytimeSolver publishes its FIRST
+                 release-valid incumbent (polled via ``next_improvement``)
+                 vs the phase-barriered pipeline's total wall time — the
+                 barrier produces nothing until everything finished, the
+                 anytime path has a usable (classic-tier) topology almost
+                 immediately. Also checks the UNBUDGETED anytime result's
+                 r_asym drift against the barrier arm (must be ~0: the
+                 unbudgeted stage graph replays the barrier bit-for-bit).
+
+  mode "budget"  quality-vs-budget curve: solve the same request under
+                 wall-clock budgets (default 50/200/1000 ms) and report
+                 the incumbent's r_asym / quality tier / release validity.
+
+Both engines are timed warm (compilation cached by problem shape — the
+warmup solve touches every device stage either arm uses).
+
+  PYTHONPATH=src python -m benchmarks.bench_anytime --nodes 64 --restarts 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import BATopoConfig, TopologyRequest, check_invariants, solve_topology
+from repro.core.anytime import AnytimeSolver
+
+DEFAULT_BUDGETS = (50.0, 200.0, 1000.0)
+
+
+def _cfg(restarts: int, sa_iters: int, polish_iters: int,
+         seed: int) -> BATopoConfig:
+    # the shipped device pipeline defaults — same arm bench_pipeline tracks
+    return BATopoConfig(sa_iters=sa_iters, polish_iters=polish_iters,
+                        restarts=restarts, seed=seed)
+
+
+def bench_first(n: int, r: int, cfg: BATopoConfig) -> dict:
+    """Barrier total vs anytime time-to-first-valid-incumbent (warm)."""
+    # warm every compile both arms touch, then time both arms fresh —
+    # the barrier batches restarts (batch-R shapes) while the anytime
+    # path solves restart-by-restart (batch-1 shapes), so each arm has
+    # its own jit cache entries and each needs its own warmup drain
+    solve_topology(TopologyRequest(n=n, r=r, scenario="homo"),
+                   cfg=cfg, engine="barrier")
+    AnytimeSolver(TopologyRequest(n=n, r=r, scenario="homo"), cfg).solve()
+
+    t0 = time.perf_counter()
+    barrier = solve_topology(TopologyRequest(n=n, r=r, scenario="homo"),
+                             cfg=cfg, engine="barrier")
+    barrier_ms = (time.perf_counter() - t0) * 1e3
+
+    solver = AnytimeSolver(TopologyRequest(n=n, r=r, scenario="homo"), cfg)
+    first = solver.next_improvement()
+    first_ms = first.elapsed_ms if first is not None else float("inf")
+    while solver.next_improvement() is not None:
+        pass
+    final = solver.result()
+
+    drift = abs(float(final.r_asym) - float(barrier.r_asym))
+    return {"bench": "anytime", "mode": "first", "n": n, "r": r,
+            "scenario": "homo", "restarts": cfg.restarts,
+            "sa_iters": cfg.sa_iters, "polish_iters": cfg.polish_iters,
+            "barrier_total_ms": round(barrier_ms, 1),
+            "anytime_first_ms": round(first_ms, 1),
+            "anytime_total_ms": round(final.elapsed_ms, 1),
+            "first_tier": first.quality_tier if first is not None else None,
+            "first_r_asym": (round(float(first.r_asym), 6)
+                             if first is not None else None),
+            "first_speedup": round(barrier_ms / max(first_ms, 1e-6), 1),
+            "final_r_asym": round(float(final.r_asym), 6),
+            "barrier_r_asym": round(float(barrier.r_asym), 6),
+            "anytime_final_drift": round(drift, 6),
+            "improvements": final.improvements,
+            "complete": bool(final.complete)}
+
+
+def bench_budget(n: int, r: int, cfg: BATopoConfig, budget_ms: float) -> dict:
+    """Quality at a wall-clock budget (warm caches assumed)."""
+    res = solve_topology(TopologyRequest(n=n, r=r, scenario="homo"),
+                         cfg=cfg, budget_ms=budget_ms)
+    topo = res.topology
+    valid = topo is not None and check_invariants(topo) is None
+    return {"bench": "anytime", "mode": "budget", "n": n, "r": r,
+            "scenario": "homo", "restarts": cfg.restarts,
+            "budget_ms": budget_ms,
+            "elapsed_ms": round(res.elapsed_ms, 1),
+            "r_asym": round(float(res.r_asym), 6),
+            "quality_tier": res.quality_tier,
+            "improvements": res.improvements,
+            "complete": bool(res.complete),
+            "valid": bool(valid)}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nodes", default="64",
+                    help="comma-separated node counts (r = 2n each)")
+    ap.add_argument("--restarts", type=int, default=4)
+    ap.add_argument("--sa-iters", type=int, default=1500)
+    ap.add_argument("--polish-iters", type=int, default=500)
+    ap.add_argument("--budgets", default=None,
+                    help="comma-separated budget_ms values "
+                         "(default 50,200,1000)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    budgets = ([float(b) for b in args.budgets.split(",") if b]
+               if args.budgets else list(DEFAULT_BUDGETS))
+    cfg = _cfg(args.restarts, args.sa_iters, args.polish_iters, args.seed)
+
+    print("== anytime pipeline: first-incumbent latency + quality-vs-budget ==")
+    rows = []
+    for n in [int(x) for x in args.nodes.split(",") if x]:
+        r = 2 * n
+        try:
+            row = bench_first(n, r, cfg)
+        except Exception as e:
+            row = {"bench": "anytime", "mode": "first", "n": n,
+                   "error": str(e)}
+        rows.append(row)
+        print("  " + json.dumps(row))
+        try:
+            # budgeted solves stream SA in chunks — a jit shape the
+            # unbudgeted arms never touch; warm it before timing
+            solve_topology(TopologyRequest(n=n, r=r, scenario="homo"),
+                           cfg=cfg, budget_ms=budgets[0] if budgets else 50.0)
+        except Exception:
+            pass
+        for budget in budgets:
+            try:
+                row = bench_budget(n, r, cfg, budget)
+            except Exception as e:
+                row = {"bench": "anytime", "mode": "budget", "n": n,
+                       "budget_ms": budget, "error": str(e)}
+            rows.append(row)
+            print("  " + json.dumps(row))
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+    failures = [r for r in rows if "error" in r]
+    if failures:  # keep the CI smoke step a real gate
+        raise SystemExit(f"{len(failures)} benchmark row(s) errored")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,9 +21,16 @@ import argparse
 import json
 import time
 
-from repro.core import ADMMConfig, BATopoConfig, optimize_topology
+from repro.core import ADMMConfig, BATopoConfig, TopologyRequest, solve_topology
 
 PHASES = ("warm_s", "admm_s", "round_s", "polish_s", "eval_s")
+
+
+def _solve_homo(n: int, r: int, cfg: BATopoConfig, prof: dict | None = None):
+    """One phase-barriered solve (this benchmark measures exactly the
+    barrier pipeline, so it pins ``engine="barrier"``)."""
+    return solve_topology(TopologyRequest(n=n, r=r, scenario="homo"),
+                          cfg=cfg, profile=prof, engine="barrier").topology
 
 
 def _cfg(mode: str, restarts: int, sa_iters: int, polish_iters: int,
@@ -49,7 +56,7 @@ def warm_caches(n: int, r: int, restarts: int, sa_iters: int,
     row's batched ADMM shape (exact fp64 at --admm-iters — ``max_iters``
     and the spec dtype are jit cache keys, so it compiles separately)."""
     cfg = _cfg("device", restarts, sa_iters, polish_iters, admm_iters, seed)
-    optimize_topology(n, r, "homo", cfg=cfg)
+    _solve_homo(n, r, cfg)
     # host warm start/polish (no jit of their own) at token iteration
     # counts, so this warms ONLY the host row's ADMM shape — device-mode
     # SA/polish here would trace fresh iters-keyed variants for nothing
@@ -57,7 +64,7 @@ def warm_caches(n: int, r: int, restarts: int, sa_iters: int,
                              sa_iters=10, polish_iters=10,
                              restarts=restarts, seed=seed,
                              warmstart="host", polish="host")
-    optimize_topology(n, r, "homo", cfg=host_admm)
+    _solve_homo(n, r, host_admm)
 
 
 def run_pipeline(n: int, r: int, mode: str, restarts: int, sa_iters: int,
@@ -65,7 +72,7 @@ def run_pipeline(n: int, r: int, mode: str, restarts: int, sa_iters: int,
     cfg = _cfg(mode, restarts, sa_iters, polish_iters, admm_iters, seed)
     prof: dict = {}
     t0 = time.time()
-    topo = optimize_topology(n, r, "homo", cfg=cfg, profile=prof)
+    topo = _solve_homo(n, r, cfg, prof)
     total = time.time() - t0
     row = {"bench": "pipeline", "n": n, "r": r, "scenario": "homo",
            "pipeline": mode, "restarts": restarts, "sa_iters": sa_iters,

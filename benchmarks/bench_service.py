@@ -66,7 +66,7 @@ def bench_fault_mix(cfg: BATopoConfig, requests: int, seed: int) -> dict:
     rng = np.random.default_rng(seed)
 
     def faulty_full(req, prof):
-        from repro.core.api import optimize_topology
+        from repro.core.anytime import TopologyRequest, solve_topology
 
         roll = int(rng.integers(0, 4))
         if roll == 0:
@@ -75,8 +75,9 @@ def bench_fault_mix(cfg: BATopoConfig, requests: int, seed: int) -> dict:
             raise SolveFailure(SolveOutcome.NON_FINITE, "injected NaN solve")
         if roll == 2:
             raise RuntimeError("injected solver crash")
-        return optimize_topology(int(req.n), int(req.r), cfg=cfg,
-                                 profile=prof)        # fault-free
+        return solve_topology(TopologyRequest(n=int(req.n), r=int(req.r)),
+                              cfg=cfg, profile=prof,
+                              engine="barrier").topology  # fault-free
 
     svc = TopologyService(cfg=cfg, policy=ServicePolicy(max_queue=8),
                           hooks=ServiceHooks(full=faulty_full))

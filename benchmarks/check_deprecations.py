@@ -1,0 +1,68 @@
+"""Deprecation lint: no in-repo caller may use the shimmed old entrypoints.
+
+``optimize_topology`` / ``sweep_topologies`` survive as thin
+DeprecationWarning shims for external callers (DESIGN.md §17), but the
+repo itself must be fully migrated to ``TopologyRequest`` +
+``solve_topology`` / ``solve_topologies``. This walks every Python file
+under src/, benchmarks/ and examples/ and fails on any *call* of a
+shimmed name. Excluded: tests/ (they pin the shims' behavior on purpose)
+and the module that defines the shims.
+
+  PYTHONPATH=src python -m benchmarks.check_deprecations
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+DEPRECATED = {"optimize_topology", "sweep_topologies"}
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SCAN_DIRS = ("src", "benchmarks", "examples")
+#: the shims live here — their own bodies call the real implementations
+EXCLUDE = {os.path.join("src", "repro", "core", "api.py")}
+
+
+def deprecated_calls(path: str) -> list[tuple[int, str]]:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = None
+        if isinstance(fn, ast.Name):
+            name = fn.id
+        elif isinstance(fn, ast.Attribute):
+            name = fn.attr
+        if name in DEPRECATED:
+            hits.append((node.lineno, name))
+    return hits
+
+
+def main(argv=None) -> int:
+    failures = []
+    for d in SCAN_DIRS:
+        base = os.path.join(ROOT, d)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in sorted(filenames):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, ROOT)
+                if rel in EXCLUDE:
+                    continue
+                for lineno, name in deprecated_calls(path):
+                    failures.append(f"{rel}:{lineno}: call of deprecated "
+                                    f"{name}() — use TopologyRequest + "
+                                    "solve_topology/solve_topologies")
+    print(f"check_deprecations: scanned {'/'.join(SCAN_DIRS)}, "
+          f"{len(failures)} violation(s)")
+    for fail in failures:
+        print("  FAIL " + fail)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,7 @@ ID_FIELDS = ("bench", "n", "r", "solver", "driver", "timing", "scenario",
              "engine", "pipeline", "psd_backend", "dtype", "precond",
              "cg_inexact", "restarts", "epochs", "train_epochs", "dim",
              "runs", "iters", "topologies", "compressor", "mode",
-             "partition", "devices")
+             "partition", "devices", "budget_ms")
 
 #: Metric → direction. "time" = lower is better, wide band (machine speed);
 #: "ratio" = higher is better, tight band (machine-relative speedups);
@@ -54,9 +54,10 @@ METRICS = {
     "reopt_gain": "ratio", "time_to_reopt_s": "time",
     "cold_ms": "time", "hit_p50_ms": "time", "p50_ms": "time",
     "p99_ms": "time", "cache_speedup": "ratio", "cache_hit_rate": "ratio",
+    "anytime_first_ms": "time", "first_speedup": "ratio",
     "r_asym_drift": "drift", "max_final_acc_drift": "drift",
     "max_rel_curve_drift": "drift", "degraded_frac": "drift",
-    "elastic_parity_drift": "drift",
+    "elastic_parity_drift": "drift", "anytime_final_drift": "drift",
 }
 
 #: Absolute floors below which drift comparisons are noise (the curve floor
@@ -69,9 +70,15 @@ DRIFT_FLOORS = {"r_asym_drift": 5e-3, "max_final_acc_drift": 0.02,
                 "degraded_frac": 0.15,
                 # the fault-free elastic step is the plain trainer bit-exactly
                 # — NO floor: any nonzero loss gap is a real divergence
-                "elastic_parity_drift": 0.0}
+                "elastic_parity_drift": 0.0,
+                # ISSUE-10 acceptance band: the unbudgeted anytime result
+                # must track the barrier pipeline to ≤ 1e-3 in r_asym
+                "anytime_final_drift": 1e-3}
 
-BOOL_FLAGS = ("ranking_match", "all_valid", "resume_exactness")
+# ("complete" is deliberately NOT gated: whether a budgeted solve finished
+# inside its wall-clock budget is machine-speed-dependent; "valid" is not —
+# an anytime result must be release-valid at ANY budget.)
+BOOL_FLAGS = ("ranking_match", "all_valid", "resume_exactness", "valid")
 
 
 def row_key(row: dict) -> tuple:

@@ -5,10 +5,11 @@ import numpy as np
 
 from repro.core import (
     BATopoConfig,
+    TopologyRequest,
     bcube_constraints,
     intra_server_constraints,
     make_baseline,
-    optimize_topology,
+    solve_topology,
 )
 from repro.core.bandwidth import (
     PaperConstants,
@@ -70,10 +71,12 @@ def ba_topo(n: int, r: int, scenario: str = "homo", *, node_bw=None, cs=None,
             seed: int = 0, sa_iters: int = 800, restarts: int = 1) -> Topology:
     cfg = BATopoConfig(seed=seed, sa_iters=sa_iters, restarts=restarts)
     if scenario == "homo":
-        return optimize_topology(n, r, "homo", cfg=cfg)
-    if scenario == "node":
-        return optimize_topology(n, r, "node", node_bandwidths=node_bw, cfg=cfg)
-    return optimize_topology(n, r, "constraint", cs=cs, cfg=cfg)
+        req = TopologyRequest(n=n, r=r, scenario="homo")
+    elif scenario == "node":
+        req = TopologyRequest(n=n, r=r, scenario="node", node_bandwidths=node_bw)
+    else:
+        req = TopologyRequest(n=n, r=r, scenario="constraint", cs=cs)
+    return solve_topology(req, cfg=cfg).topology
 
 
 #: §VI-B edge-budget grids per scenario (bench_training_time's Table II sets).

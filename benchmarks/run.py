@@ -47,9 +47,9 @@ def main(argv=None) -> None:
         import json as _json
         import tempfile
 
-        from . import (bench_admm, bench_chaos, bench_compression,
-                       bench_dynamic, bench_elastic, bench_pipeline,
-                       bench_service, bench_training_time)
+        from . import (bench_admm, bench_anytime, bench_chaos,
+                       bench_compression, bench_dynamic, bench_elastic,
+                       bench_pipeline, bench_service, bench_training_time)
         # Fixed, quick configuration so rows stay comparable across PRs:
         # backend×driver grid at n=16/32 + the fast-compare row at n=64,
         # the end-to-end outer-pipeline rows (device vs host phase
@@ -66,6 +66,8 @@ def main(argv=None) -> None:
                              "--json-out", f"{td}/admm.json"])
             bench_pipeline.main(["--nodes", "64", "--restarts", "4",
                                  "--json-out", f"{td}/pipeline.json"])
+            bench_anytime.main(["--nodes", "64", "--restarts", "4",
+                                "--json-out", f"{td}/anytime.json"])
             bench_training_time.main(["--scenario", "homo", "--engine", "both",
                                       "--json-out", f"{td}/training.json"])
             bench_dynamic.main(["--engine", "both",
@@ -78,6 +80,7 @@ def main(argv=None) -> None:
             bench_service.main(["--json-out", f"{td}/service.json"])
             rows = (_json.load(open(f"{td}/admm.json"))
                     + _json.load(open(f"{td}/pipeline.json"))
+                    + _json.load(open(f"{td}/anytime.json"))
                     + [r for r in _json.load(open(f"{td}/training.json"))
                        if r.get("bench") == "training"]
                     + [r for r in _json.load(open(f"{td}/dynamic.json"))
@@ -98,8 +101,9 @@ def main(argv=None) -> None:
                 rows += _json.load(open(f"{td}/sharded.json"))
         with open(args.json, "w") as f:
             _json.dump(rows, f, indent=1)
-        print("tracked ADMM + pipeline + training + dynamic + compression "
-              f"+ chaos + elastic + service perf rows written to {args.json}")
+        print("tracked ADMM + pipeline + anytime + training + dynamic "
+              "+ compression + chaos + elastic + service perf rows "
+              f"written to {args.json}")
         return
 
     from . import (bench_admm, bench_compression, bench_consensus,
@@ -141,6 +145,16 @@ def main(argv=None) -> None:
     else:
         bench_pipeline.main(["--nodes", "64", "--restarts", "4",
                              "--json-out", f"{ART}/pipeline.json"])
+
+    print("\n### bench_anytime (budgeted best-so-far pipeline, DESIGN §17)")
+    from . import bench_anytime
+    if quick:
+        bench_anytime.main(["--nodes", "24", "--restarts", "2",
+                            "--sa-iters", "300", "--polish-iters", "150",
+                            "--json-out", f"{ART}/anytime.json"])
+    else:
+        bench_anytime.main(["--nodes", "64", "--restarts", "4",
+                            "--json-out", f"{ART}/anytime.json"])
 
     print("\n### bench_dynamic (beyond-paper: time-varying gossip)")
     bench_dynamic.main(["--json-out", f"{ART}/dynamic.json"])

@@ -11,10 +11,11 @@ import numpy as np
 
 from repro.core import (
     BATopoConfig,
+    TopologyRequest,
     bcube_constraints,
     intra_server_constraints,
-    optimize_topology,
     pod_boundary_constraints,
+    solve_topology,
 )
 from repro.core.allocation import allocate_edge_capacity
 from repro.core.consensus import simulate_consensus, time_to_error
@@ -41,26 +42,30 @@ print("=== 1. node-level heterogeneity (Algorithm 1), n=16, b = 3:…:1 ===")
 b = np.array([9.76] * 8 + [3.25] * 8)
 alloc = allocate_edge_capacity(b, r=32)
 print(f"  allocation e={alloc.e.tolist()}  b_unit={alloc.b_unit:.2f} GB/s")
-topo = optimize_topology(16, 32, "node", node_bandwidths=b, cfg=CFG)
+topo = solve_topology(TopologyRequest(n=16, r=32, scenario="node",
+                                      node_bandwidths=b), cfg=CFG).topology
 print(f"  BA-Topo: edges={len(topo.edges)} r_asym={topo.r_asym():.3f} "
       f"b_unit={topo.meta.get('b_unit'):.2f}")
 
 print("\n=== 2. intra-server PIX/NODE/SYS tree (Fig. 3), n=8 ===")
 cs = intra_server_constraints(8)
-topo = optimize_topology(8, 12, "constraint", cs=cs, cfg=CFG)
+topo = solve_topology(TopologyRequest(n=8, r=12, scenario="constraint",
+                                      cs=cs), cfg=CFG).topology
 print(f"  BA-Topo: edges={len(topo.edges)} r_asym={topo.r_asym():.3f} "
       f"b_min={b_min_of(topo, cs):.2f} GB/s  feasible={cs.feasible(_sel(topo))}")
 
 print("\n=== 3. inter-server BCube(p=4, k=2), n=16, port ratio 1:2 ===")
 cs = bcube_constraints(p=4, k=2)
-topo = optimize_topology(16, 48, "constraint", cs=cs, cfg=CFG)
+topo = solve_topology(TopologyRequest(n=16, r=48, scenario="constraint",
+                                      cs=cs), cfg=CFG).topology
 tr = simulate_consensus(topo, iters=300, b_min=b_min_of(topo, cs))
 print(f"  BA-Topo: edges={len(topo.edges)} r_asym={topo.r_asym():.3f} "
       f"t(err≤1e-4)={time_to_error(tr):.0f}ms")
 
 print("\n=== 4. TPU 2-pod boundary (DESIGN.md §7 adaptation), n=32 ===")
 cs = pod_boundary_constraints(32, pods=2, dci_cap_total=4)
-topo = optimize_topology(32, 64, "constraint", cs=cs, cfg=CFG)
+topo = solve_topology(TopologyRequest(n=32, r=64, scenario="constraint",
+                                      cs=cs), cfg=CFG).topology
 cross = sum(1 for i, j in topo.edges if (i < 16) != (j < 16))
 print(f"  BA-Topo: edges={len(topo.edges)} r_asym={topo.r_asym():.3f} "
       f"cross-pod edges={cross} (DCI cap 4)")

@@ -10,7 +10,7 @@ Walks the paper's pipeline end to end on n = 16 workers:
 """
 import numpy as np
 
-from repro.core import BATopoConfig, make_baseline, optimize_topology
+from repro.core import BATopoConfig, TopologyRequest, make_baseline, solve_topology
 from repro.core.bandwidth import homo_edge_bandwidth, min_edge_bandwidth
 from repro.core.consensus import simulate_consensus, time_to_error
 from repro.core.graph import weight_matrix_from_weights
@@ -19,10 +19,13 @@ from repro.dsgd import bytes_per_sync, reconstruct_weight_matrix, schedule_from_
 N, R = 16, 32
 
 print(f"=== 1. BA-Topo for n={N}, edge budget r={R} (paper Eq. 9) ===")
-topo = optimize_topology(N, R, "homo", cfg=BATopoConfig(sa_iters=800))
+res = solve_topology(TopologyRequest(n=N, r=R, scenario="homo"),
+                     cfg=BATopoConfig(sa_iters=800))
+topo = res.topology
 print(f"  edges={len(topo.edges)}  r_asym={topo.r_asym():.4f} "
       "(paper Table I @ n=16: 0.52)")
-print(f"  selected_from={topo.meta.get('selected_from')}")
+print(f"  selected_from={topo.meta.get('selected_from')}  "
+      f"tier={res.quality_tier}")
 
 print("\n=== 2. consensus speed vs baselines (paper Fig. 1) ===")
 for t in [topo, make_baseline("exponential", N), make_baseline("ring", N)]:

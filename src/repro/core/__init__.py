@@ -1,6 +1,14 @@
 """BA-Topo core: the paper's contribution as a composable library."""
 from .admm import ADMMConfig, ADMMResult, HeterogeneousADMM, HomogeneousADMM
 from .allocation import AllocationResult, allocate_edge_capacity
+from .anytime import (
+    AnytimeSolver,
+    PhaseProfile,
+    TopologyRequest,
+    TopologyResult,
+    solve_topologies,
+    solve_topology,
+)
 from .api import BATopoConfig, large_n_admm_config, optimize_topology, sweep_topologies
 from .engine import ADMMState, ProblemSpec, resolve_psd_backend
 from .shard import resolve_partition
@@ -17,6 +25,8 @@ __all__ = [
     "ADMMConfig", "ADMMResult", "HeterogeneousADMM", "HomogeneousADMM",
     "ADMMState", "ProblemSpec",
     "AllocationResult", "allocate_edge_capacity",
+    "AnytimeSolver", "PhaseProfile", "TopologyRequest", "TopologyResult",
+    "solve_topology", "solve_topologies",
     "BATopoConfig", "large_n_admm_config", "optimize_topology",
     "sweep_topologies", "resolve_psd_backend", "resolve_partition",
     "PaperConstants", "homo_edge_bandwidth", "min_edge_bandwidth",

@@ -31,12 +31,12 @@ fixed n the whole cardinality sweep runs as one vmapped solve.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .admm import ADMMConfig, HeterogeneousADMM, HomogeneousADMM
-from .allocation import allocate_edge_capacity
 from .anneal import anneal_topology, greedy_degree_graph
 from .constraints import ConstraintSet
 from .graph import Topology, all_edges, edge_index, is_connected, r_asym, weight_matrix_from_weights
@@ -403,7 +403,33 @@ def optimize_topology(
     cfg: BATopoConfig | None = None,
     profile: dict | None = None,
 ) -> Topology:
-    """Produce a BA-Topo for the given scenario.
+    """Deprecated signature-compatible wrapper around the unified request
+    API (DESIGN.md §17): build a :class:`~repro.core.anytime.TopologyRequest`
+    and call :func:`~repro.core.anytime.solve_topology` instead. Behavior
+    (including the barrier execution order, profile keys and error
+    messages) is unchanged.
+    """
+    warnings.warn(
+        "optimize_topology(n, r, ...) is deprecated; build a "
+        "TopologyRequest and call repro.core.anytime.solve_topology(...)",
+        DeprecationWarning, stacklevel=2)
+    return _optimize_request(n, r, scenario=scenario, cs=cs,
+                             node_bandwidths=node_bandwidths, cfg=cfg,
+                             profile=profile)
+
+
+def _optimize_request(
+    n: int,
+    r: int,
+    scenario: str = "homo",
+    cs: ConstraintSet | None = None,
+    node_bandwidths: np.ndarray | None = None,
+    cfg: BATopoConfig | None = None,
+    profile: dict | None = None,
+) -> Topology:
+    """Produce a BA-Topo for the given scenario — the phase-barriered
+    pipeline (``solve_topology(engine="barrier")`` and the unbudgeted
+    anytime parity oracle).
 
     scenario ∈ {"homo", "node", "constraint"}:
       - "homo": Eq. (9) with Card(g) ≤ r.
@@ -418,31 +444,13 @@ def optimize_topology(
     repair + polish) wins. Pass ``profile={}`` to collect the per-phase
     wall-time breakdown (keys ``warm_s/admm_s/round_s/polish_s/eval_s``).
     """
+    from .anytime import resolve_scenario
+
     cfg = cfg or BATopoConfig()
     _validate_pipeline_cfg(cfg)
     prof = {} if profile is None else profile
-    meta: dict = {"scenario": scenario, "r": r}
-
-    if scenario == "node":
-        if node_bandwidths is None:
-            raise ValueError("scenario='node' requires node_bandwidths "
-                             "(per-node GB/s profile for Algorithm 1)")
-        alloc = allocate_edge_capacity(np.asarray(node_bandwidths), r)
-        from .allocation import graphical_repair
-        from .constraints import node_level_constraints
-
-        e_alloc = graphical_repair(alloc.e)
-        cs = node_level_constraints(n, e_alloc, np.asarray(node_bandwidths))
-        meta["b_unit"] = alloc.b_unit
-        meta["alloc_e"] = e_alloc.tolist()
-        deg_targets = e_alloc
-    elif scenario == "constraint":
-        if cs is None:
-            raise ValueError("scenario='constraint' requires a ConstraintSet "
-                             "(cs=...)")
-        deg_targets = None
-    else:
-        deg_targets = _homo_degree_targets(n, r)
+    cs, deg_targets, meta = resolve_scenario(n, r, scenario, cs,
+                                             node_bandwidths, context="api")
 
     # ---- phase 1: warm starts (device SA by default) ----------------------
     t0 = time.perf_counter()
@@ -538,6 +546,19 @@ def _classic_candidates(n: int, r: int,
 def sweep_topologies(
     ns, rs, cfg: BATopoConfig | None = None,
 ) -> dict:
+    """Deprecated signature-compatible wrapper: build
+    :class:`~repro.core.anytime.TopologyRequest` objects and call
+    :func:`~repro.core.anytime.solve_topologies` instead (same vmapped
+    per-n sweep engine underneath). Returns ``{(n, r): Topology}`` exactly
+    as before."""
+    warnings.warn(
+        "sweep_topologies(ns, rs, ...) is deprecated; build TopologyRequest "
+        "objects and call repro.core.anytime.solve_topologies(...)",
+        DeprecationWarning, stacklevel=2)
+    return _sweep_requests(ns, rs, cfg)
+
+
+def _sweep_requests(ns, rs, cfg: BATopoConfig | None = None) -> dict:
     """Homogeneous multi-scenario sweep: a BA-Topo for every (n, r) pair.
 
     For each node count n, the whole cardinality sweep ``rs`` runs as ONE
@@ -548,16 +569,11 @@ def sweep_topologies(
     stay per-instance on host. Returns ``{(n, r): Topology}``, keyed by the
     *requested* r (budgets above the candidate-edge count are clamped for
     the solve); a value is ``None`` if no connected candidate was found.
-    Unlike ``optimize_topology``, the sweep uses one warm start per (n, r)
+    Unlike the one-shot pipeline, the sweep uses one warm start per (n, r)
     — ``cfg.restarts`` is not consulted — and, like ``solve_batched``, it
     always runs the vmapped scan driver: a ``driver="python"`` preference
-    applies only to ``optimize_topology``/``solve``.
+    applies only to the one-shot solve.
     """
-    import jax
-    import jax.numpy as jnp
-
-    from .engine import init_state, make_homo_spec, solve_sweep_spec
-
     cfg = cfg or BATopoConfig()
     if cfg.admm.driver not in ("scan", "python"):
         raise ValueError(
@@ -569,54 +585,67 @@ def sweep_topologies(
     _validate_pipeline_cfg(cfg)
     out: dict = {}
     for n in ns:
-        m = len(all_edges(n))
-        rs_req = [int(r) for r in rs]
-        rs_n = [min(r, m) for r in rs_req]  # solve with the clamped budget
-        spec = make_homo_spec(n, max(rs_n), cfg.admm)
-        # one warm start per (n, r); sweep instance k plays the role of
-        # restart k, and the device SA batches instances whose warm graphs
-        # share an edge count into one vmapped call
-        inits, seeds = [], []
-        for k, r in enumerate(rs_n):
-            deg_targets = _homo_degree_targets(n, r)
-            edges0, seed = _init_graph(n, r, "homo", None, deg_targets, cfg, k)
-            inits.append(edges0)
-            seeds.append(seed)
-        warms = [_pack_warm(n, e)
-                 for e in _anneal_edges(n, inits, seeds, None, cfg)]
-        states = [init_state(spec, jnp.asarray(g0), lam0) for g0, _, lam0 in warms]
-        batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-        from .shard import (
-            resolve_partition, solve_spec_sharded, solve_sweep_spec_sharded)
+        out.update(_sweep_one_n(int(n), [int(r) for r in rs], cfg))
+    return out
 
-        part = resolve_partition(cfg.admm.partition, n, batch=len(rs_n))
-        if part == "instances":
-            results = solve_sweep_spec_sharded(
-                spec, np.asarray(rs_n), batched, cfg.admm)
-        elif part == "edges":
-            results = [solve_spec_sharded(
-                spec.replace(r=jnp.asarray(rn, dtype=jnp.int64)),
-                jax.tree.map(lambda a, k=k: a[k], batched), cfg.admm,
-                r_cap=max(rs_n)) for k, rn in enumerate(rs_n)]
-        else:
-            results = solve_sweep_spec(spec, np.asarray(rs_n), batched, cfg.admm)
-        for (r_req, r, warm, res) in zip(rs_req, rs_n, warms, results):
-            meta = {"scenario": "homo", "r": r}
-            items, sources = _candidate_items(n, r, [warm], [res], None, cfg,
-                                              meta, use_z=False)
-            topos = _finalize_batch(n, items, cfg, None)
-            best, best_val, failures = _pick_best(n, items, topos, sources)
-            if best is None and failures:
-                from .guard import TopologyInvariantError
 
-                bad = failures[0].rsplit(": ", 1)[-1]
-                raise TopologyInvariantError(
-                    f"no candidate topology for n={n}, r={r} passed release "
-                    f"validation — first failure: {failures[0]!r} "
-                    f"(all: {failures})", invariant=bad, failures=failures)
-            if best is not None:
-                best.meta["r_asym"] = best_val
-            out[(n, r_req)] = best  # keyed by the *requested* budget
+def _sweep_one_n(n: int, rs_req: list[int], cfg: BATopoConfig) -> dict:
+    """One node count of the sweep: all budgets in ``rs_req`` solved as one
+    vmapped dispatch. Shared by ``_sweep_requests`` and
+    ``anytime.solve_topologies``."""
+    import jax
+    import jax.numpy as jnp
+
+    from .engine import init_state, make_homo_spec, solve_sweep_spec
+
+    out: dict = {}
+    m = len(all_edges(n))
+    rs_n = [min(r, m) for r in rs_req]  # solve with the clamped budget
+    spec = make_homo_spec(n, max(rs_n), cfg.admm)
+    # one warm start per (n, r); sweep instance k plays the role of
+    # restart k, and the device SA batches instances whose warm graphs
+    # share an edge count into one vmapped call
+    inits, seeds = [], []
+    for k, r in enumerate(rs_n):
+        deg_targets = _homo_degree_targets(n, r)
+        edges0, seed = _init_graph(n, r, "homo", None, deg_targets, cfg, k)
+        inits.append(edges0)
+        seeds.append(seed)
+    warms = [_pack_warm(n, e)
+             for e in _anneal_edges(n, inits, seeds, None, cfg)]
+    states = [init_state(spec, jnp.asarray(g0), lam0) for g0, _, lam0 in warms]
+    batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    from .shard import (
+        resolve_partition, solve_spec_sharded, solve_sweep_spec_sharded)
+
+    part = resolve_partition(cfg.admm.partition, n, batch=len(rs_n))
+    if part == "instances":
+        results = solve_sweep_spec_sharded(
+            spec, np.asarray(rs_n), batched, cfg.admm)
+    elif part == "edges":
+        results = [solve_spec_sharded(
+            spec.replace(r=jnp.asarray(rn, dtype=jnp.int64)),
+            jax.tree.map(lambda a, k=k: a[k], batched), cfg.admm,
+            r_cap=max(rs_n)) for k, rn in enumerate(rs_n)]
+    else:
+        results = solve_sweep_spec(spec, np.asarray(rs_n), batched, cfg.admm)
+    for (r_req, r, warm, res) in zip(rs_req, rs_n, warms, results):
+        meta = {"scenario": "homo", "r": r}
+        items, sources = _candidate_items(n, r, [warm], [res], None, cfg,
+                                          meta, use_z=False)
+        topos = _finalize_batch(n, items, cfg, None)
+        best, best_val, failures = _pick_best(n, items, topos, sources)
+        if best is None and failures:
+            from .guard import TopologyInvariantError
+
+            bad = failures[0].rsplit(": ", 1)[-1]
+            raise TopologyInvariantError(
+                f"no candidate topology for n={n}, r={r} passed release "
+                f"validation — first failure: {failures[0]!r} "
+                f"(all: {failures})", invariant=bad, failures=failures)
+        if best is not None:
+            best.meta["r_asym"] = best_val
+        out[(n, r_req)] = best  # keyed by the *requested* budget
     return out
 
 

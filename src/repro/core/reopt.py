@@ -161,6 +161,7 @@ def reoptimize_topology(
     alive: np.ndarray | None = None,
     cfg: BATopoConfig | None = None,
     policy: DriftPolicy | None = None,
+    budget_ms: float | None = None,
 ) -> ReoptResult:
     """Re-solve the topology under drifted constraints, warm-started from
     the incumbent; keep the incumbent on any failure.
@@ -172,6 +173,14 @@ def reoptimize_topology(
     still covers all n nodes, because churned nodes rejoin at their frozen
     params and need edges waiting for them.
 
+    ``budget_ms`` (opt-in) bounds the COLD rung with a budgeted anytime
+    solve of whatever budget remains after the warm attempt — the elastic
+    runtime passes its ``activation_lag_steps`` adoption window here so the
+    re-solve fills exactly the time the fleet must wait anyway. The default
+    (None) keeps the unbudgeted deterministic ladder: wall-clock budgets
+    make the adopted support timing-dependent, which would break bit-exact
+    crash/resume replay (DESIGN.md §16) — hence opt-in.
+
     The attempt ladder and the non-convergence test (``policy.max_residual``)
     are documented in the module docstring; ``time_to_reopt_s`` measures
     this call's wall time, i.e. how long training would run on the stale
@@ -182,22 +191,12 @@ def reoptimize_topology(
     policy = policy or DriftPolicy()
     n = incumbent.n
     r = int(r if r is not None else len(incumbent.edges))
-    meta: dict = {"scenario": scenario, "r": r}
 
-    if scenario == "node":
-        if node_bandwidths is None:
-            raise ValueError("scenario='node' re-optimization requires the "
-                             "drifted node_bandwidths profile")
-        from .allocation import allocate_edge_capacity, graphical_repair
-        from .constraints import node_level_constraints
+    from .anytime import resolve_scenario
 
-        alloc = allocate_edge_capacity(np.asarray(node_bandwidths), r)
-        e_alloc = graphical_repair(alloc.e)
-        cs = node_level_constraints(n, e_alloc, np.asarray(node_bandwidths))
-        meta["b_unit"] = alloc.b_unit
-    elif scenario == "constraint" and cs is None:
-        raise ValueError("scenario='constraint' re-optimization requires "
-                         "the drifted ConstraintSet")
+    cs, _, meta = resolve_scenario(n, r, scenario, cs, node_bandwidths,
+                                   context="reopt")
+    meta.pop("alloc_e", None)  # reopt meta stays (scenario, r[, b_unit])
 
     live_edges = incumbent.edges
     if alive is not None:
@@ -214,11 +213,24 @@ def reoptimize_topology(
     warm = _pack_warm(n, live_edges)
 
     def _cold():
-        from .api import optimize_topology
+        from .anytime import TopologyRequest, solve_topology
 
-        cand = optimize_topology(n, r, scenario=scenario, cs=cs,
-                                 node_bandwidths=node_bandwidths, cfg=cfg)
-        return cand if cand.meta.get("connected", True) else None
+        req = TopologyRequest(n=n, r=r, scenario=scenario, cs=cs,
+                              node_bandwidths=node_bandwidths)
+        if budget_ms is None:
+            cand = solve_topology(req, cfg=cfg, engine="barrier").topology
+        else:
+            remaining = budget_ms - (time.perf_counter() - t_start) * 1e3
+            if remaining <= 0:
+                return None                 # window spent — keep incumbent
+            res = solve_topology(req, cfg=cfg, budget_ms=remaining)
+            # an internal classic fallback on an expired budget is NOT an
+            # upgrade over a live incumbent — treat it as "no candidate"
+            if not res.complete and res.quality_tier == "classic":
+                return None
+            cand = res.topology
+        return (cand if cand is not None
+                and cand.meta.get("connected", True) else None)
 
     ladder = run_ladder([
         ("warm", lambda: attempt_admm(

@@ -40,7 +40,7 @@ from . import engine as _engine  # noqa: F401 — owns the global x64 enable
 from .constraints import ConstraintSet
 from .graph import all_edges
 
-__all__ = ["aspl_matmul", "anneal_topology_batched"]
+__all__ = ["aspl_matmul", "anneal_topology_batched", "anneal_topology_stream"]
 
 
 def _packed_index(n, i, j):
@@ -221,33 +221,12 @@ def _sa_run(adj0, eps0, usage0, keys, okm, M, e_cap, T0,
     return jax.vmap(one)(adj0, eps0, usage0, keys)
 
 
-def anneal_topology_batched(
-    n: int,
-    edges0: list[list[tuple[int, int]]],
-    cs: ConstraintSet | None = None,
-    iters: int = 2000,
-    T0: float = 0.5,
-    seeds: list[int] | None = None,
-    use_kernel: bool = False,
-) -> list[list[tuple[int, int]]]:
-    """SA over degree-preserving 2-swaps for a *batch* of start graphs in
-    one vmapped, scan-compiled device call. Mirrors ``anneal_topology``'s
-    objective and invariants (ASPL minimization, degree preservation,
-    capacity feasibility, connectivity).
-
-    Every element of ``edges0`` must have the same edge count (a 2-swap
-    preserves it, so the endpoint array is a fixed-shape state leaf);
-    callers group heterogeneous batches by edge count.
-    """
+def _pack_sa_batch(n, edges0, cs, seeds):
+    """Host-side packing shared by the one-shot and streaming SA drivers:
+    adjacency matrices, endpoint arrays, constraint usage rows, the
+    admissibility mask and PRNG keys for a batch of start graphs."""
     B = len(edges0)
-    assert B > 0
     E = len(edges0[0])
-    assert all(len(e) == E for e in edges0), "edge counts must match in a batch"
-    if E < 2 or iters <= 0:  # host loop also bails: no 2-swap is possible
-        return [sorted(e) for e in edges0]
-    seeds = list(range(B)) if seeds is None else list(seeds)
-    assert len(seeds) == B
-
     adj0 = np.zeros((B, n, n), dtype=bool)
     eps0 = np.zeros((B, E, 2), dtype=np.int32)
     for k, edges in enumerate(edges0):
@@ -285,14 +264,130 @@ def anneal_topology_batched(
         equality = False
 
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-    best_eps, _ = _sa_run(
-        jnp.asarray(adj0), jnp.asarray(eps0), jnp.asarray(usage0), keys,
-        jnp.asarray(okm), M, e_cap, jnp.asarray(float(T0)),
-        n=n, E=E, iters=int(iters), use_kernel=bool(use_kernel),
-        equality=equality, has_cs=has_cs)
+    return (jnp.asarray(adj0), jnp.asarray(eps0), jnp.asarray(usage0), keys,
+            jnp.asarray(okm), M, e_cap, equality, has_cs)
 
+
+def _eps_to_edges(best_eps):
     out = []
-    for k in range(B):
+    for k in range(best_eps.shape[0]):
         ep = np.asarray(best_eps[k])
         out.append(sorted((int(i), int(j)) for i, j in ep))
     return out
+
+
+def anneal_topology_batched(
+    n: int,
+    edges0: list[list[tuple[int, int]]],
+    cs: ConstraintSet | None = None,
+    iters: int = 2000,
+    T0: float = 0.5,
+    seeds: list[int] | None = None,
+    use_kernel: bool = False,
+) -> list[list[tuple[int, int]]]:
+    """SA over degree-preserving 2-swaps for a *batch* of start graphs in
+    one vmapped, scan-compiled device call. Mirrors ``anneal_topology``'s
+    objective and invariants (ASPL minimization, degree preservation,
+    capacity feasibility, connectivity).
+
+    Every element of ``edges0`` must have the same edge count (a 2-swap
+    preserves it, so the endpoint array is a fixed-shape state leaf);
+    callers group heterogeneous batches by edge count.
+    """
+    B = len(edges0)
+    assert B > 0
+    E = len(edges0[0])
+    assert all(len(e) == E for e in edges0), "edge counts must match in a batch"
+    if E < 2 or iters <= 0:  # host loop also bails: no 2-swap is possible
+        return [sorted(e) for e in edges0]
+    seeds = list(range(B)) if seeds is None else list(seeds)
+    assert len(seeds) == B
+
+    adj0, eps0, usage0, keys, okm, M, e_cap, equality, has_cs = \
+        _pack_sa_batch(n, edges0, cs, seeds)
+    best_eps, _ = _sa_run(
+        adj0, eps0, usage0, keys, okm, M, e_cap, jnp.asarray(float(T0)),
+        n=n, E=E, iters=int(iters), use_kernel=bool(use_kernel),
+        equality=equality, has_cs=has_cs)
+    return _eps_to_edges(best_eps)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _sa_init(adj0, eps0, usage0, keys, use_kernel):
+    """Initial SA carry for the streaming driver (batched)."""
+
+    def one(adj_b, eps_b, usage_b, key_b):
+        cost0 = _aspl_cost(adj_b, use_kernel=use_kernel)
+        return (adj_b, eps_b, usage_b, cost0, adj_b, eps_b, cost0, key_b)
+
+    return jax.vmap(one)(adj0, eps0, usage0, keys)
+
+
+@partial(jax.jit, static_argnames=("n", "E", "chunk", "iters", "use_kernel",
+                                   "equality", "has_cs"))
+def _sa_chunk(carry, t_start, okm, M, e_cap, T0,
+              n, E, chunk, iters, use_kernel, equality, has_cs):
+    """Advance the batched SA carry by ``chunk`` moves starting at absolute
+    step ``t_start``. Because `_sa_move` derives its per-step key by
+    ``fold_in(key, t)`` with the *absolute* step index and its temperature
+    from the *static total* ``iters``, chunked execution visits the exact
+    same (key, temperature) sequence as `_sa_run`'s single scan — streaming
+    is bit-equal to one-shot at exhaustion (tested)."""
+    spec = {"static": (n, E, T0, iters, use_kernel, equality, has_cs),
+            "okm": okm, "M": M, "e_cap": e_cap}
+    ts = t_start + jnp.arange(chunk, dtype=jnp.int32)
+
+    def one(carry_b):
+        out, _ = lax.scan(partial(_sa_move, spec), carry_b, ts)
+        return out
+
+    return jax.vmap(one)(carry)
+
+
+def anneal_topology_stream(
+    n: int,
+    edges0: list[list[tuple[int, int]]],
+    cs: ConstraintSet | None = None,
+    iters: int = 2000,
+    T0: float = 0.5,
+    seeds: list[int] | None = None,
+    use_kernel: bool = False,
+    chunk: int | None = None,
+):
+    """Generator variant of `anneal_topology_batched` for the anytime outer
+    pipeline: yields ``(edge_lists, best_costs, t_done)`` after every chunk
+    of moves, so a budgeted caller can stop between chunks and adopt the
+    best-so-far graphs. Exhausting the generator produces edge lists
+    bit-identical to `anneal_topology_batched` with the same arguments
+    (same absolute fold_in step indices, same static-total temperature
+    schedule — see `_sa_chunk`).
+    """
+    B = len(edges0)
+    assert B > 0
+    E = len(edges0[0])
+    assert all(len(e) == E for e in edges0), "edge counts must match in a batch"
+    if E < 2 or iters <= 0:
+        yield [sorted(e) for e in edges0], [float("inf")] * B, 0
+        return
+    seeds = list(range(B)) if seeds is None else list(seeds)
+    assert len(seeds) == B
+    iters = int(iters)
+    if chunk is None:
+        chunk = max(1, -(-iters // 8))  # default: ~8 poll points
+    chunk = int(chunk)
+
+    adj0, eps0, usage0, keys, okm, M, e_cap, equality, has_cs = \
+        _pack_sa_batch(n, edges0, cs, seeds)
+    carry = _sa_init(adj0, eps0, usage0, keys, use_kernel=bool(use_kernel))
+    T0j = jnp.asarray(float(T0))
+    t = 0
+    while t < iters:
+        step = min(chunk, iters - t)
+        carry = _sa_chunk(
+            carry, jnp.asarray(t, jnp.int32), okm, M, e_cap, T0j,
+            n=n, E=E, chunk=step, iters=iters, use_kernel=bool(use_kernel),
+            equality=equality, has_cs=has_cs)
+        t += step
+        best_eps, best_cost = carry[5], carry[6]
+        yield (_eps_to_edges(best_eps),
+               [float(c) for c in np.asarray(best_cost)], t)

@@ -149,6 +149,14 @@ class ElasticSpec:
     ``activation_lag_steps`` rounds after the trigger (deterministic in
     steps, so a resumed run replays the same adoption schedule bit-exactly;
     the measured solve wall time is reported, not modeled).
+    ``reopt_budget``: bound the re-solve with the anytime pipeline —
+    ``"window"`` budgets it to exactly the adoption window the fleet waits
+    out anyway (``activation_lag_steps`` × the incumbent's modeled
+    fault-free round time at the drifted profile), a float is an explicit
+    ms budget, and None (default) keeps the unbudgeted deterministic
+    re-solve: a wall-clock budget makes the adopted support
+    timing-dependent, which would break the bit-exact crash/resume replay
+    guarantee (DESIGN.md §16) — so budgeting is opt-in.
     """
 
     chaos: ChaosSpec
@@ -159,6 +167,7 @@ class ElasticSpec:
     reopt: bool = True
     reopt_scenario: str = "node"
     reopt_r: int | None = None
+    reopt_budget: float | str | None = None
     activation_lag_steps: int = 1
     drift: DriftPolicy = field(default_factory=DriftPolicy)
     topo_cfg: Any = None              # BATopoConfig | None (core.api import cycle)
@@ -491,11 +500,18 @@ class ElasticRuntime:
     def _reoptimize(self, es: ElasticState, t: int, bw: np.ndarray,
                     alive, reason: str) -> ReoptResult:
         spec = self.spec
+        budget_ms = None
+        if spec.reopt_budget is not None:
+            if spec.reopt_budget == "window":
+                budget_ms = (max(spec.activation_lag_steps, 1)
+                             * fault_free_round_ms(es.topology, bw, spec.const))
+            else:
+                budget_ms = float(spec.reopt_budget)
         res = reoptimize_topology(
             es.topology, scenario=spec.reopt_scenario,
             node_bandwidths=bw if spec.reopt_scenario == "node" else None,
             r=spec.reopt_r, alive=np.asarray(alive), cfg=spec.topo_cfg,
-            policy=spec.drift)
+            policy=spec.drift, budget_ms=budget_ms)
         es.reopts += 1
         if res.reoptimized:
             es.pending = (t + max(spec.activation_lag_steps, 1), res.topology)

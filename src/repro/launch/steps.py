@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, ModelConfig, get_arch, shape_supported
-from repro.core import BATopoConfig, make_baseline, optimize_topology
+from repro.core import BATopoConfig, TopologyRequest, make_baseline, solve_topology
 from repro.core.graph import Topology
 from repro.dsgd import (
     DSGDState,
@@ -152,11 +152,11 @@ def _cached_ba_topology(n: int, r: int, seed: int,
         return Topology(n, [tuple(e) for e in d["edges"]], np.asarray(d["g"]),
                         name=f"ba-topo(n={n},r={r})", meta=d.get("meta", {}))
     if node_bw is not None:
-        topo = optimize_topology(n, r, "node",
-                                 node_bandwidths=np.asarray(node_bw, float),
-                                 cfg=BATopoConfig(seed=seed))
+        req = TopologyRequest(n=n, r=r, scenario="node",
+                              node_bandwidths=np.asarray(node_bw, float))
     else:
-        topo = optimize_topology(n, r, "homo", cfg=BATopoConfig(seed=seed))
+        req = TopologyRequest(n=n, r=r, scenario="homo")
+    topo = solve_topology(req, cfg=BATopoConfig(seed=seed)).topology
     cache[ck] = {"edges": [list(e) for e in topo.edges],
                  "g": np.asarray(topo.g).tolist(),
                  "meta": {k: v for k, v in topo.meta.items()

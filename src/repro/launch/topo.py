@@ -16,10 +16,11 @@ import numpy as np
 
 from repro.core import (
     BATopoConfig,
+    TopologyRequest,
     bcube_constraints,
     intra_server_constraints,
-    optimize_topology,
     pod_boundary_constraints,
+    solve_topology,
 )
 from repro.core.bandwidth import homo_edge_bandwidth, min_edge_bandwidth, t_iter
 from repro.core.graph import weight_matrix_from_weights
@@ -53,28 +54,34 @@ def main() -> None:
                     help="max edges crossing each pod boundary")
     ap.add_argument("--sa-iters", type=int, default=1500)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-ms", type=float, default=None,
+                    help="anytime wall-clock budget; omit for the full "
+                         "deterministic solve")
     ap.add_argument("--out", default=None, help="write topology json")
     args = ap.parse_args()
 
     cfg = BATopoConfig(sa_iters=args.sa_iters, seed=args.seed)
     n = args.n
     if args.scenario == "homo":
-        topo = optimize_topology(n, args.r, "homo", cfg=cfg)
+        req = TopologyRequest(n=n, r=args.r, scenario="homo")
     elif args.scenario == "node":
         if not args.bandwidths:
             raise ValueError("--bandwidths is required for --scenario node "
                              "(e.g. --bandwidths 9.76x8,3.25x8)")
         b = parse_bandwidths(args.bandwidths, n)
-        topo = optimize_topology(n, args.r, "node", node_bandwidths=b, cfg=cfg)
+        req = TopologyRequest(n=n, r=args.r, scenario="node",
+                              node_bandwidths=b)
     elif args.scenario == "intra":
         cs = intra_server_constraints(n)
-        topo = optimize_topology(n, args.r, "constraint", cs=cs, cfg=cfg)
+        req = TopologyRequest(n=n, r=args.r, scenario="constraint", cs=cs)
     elif args.scenario == "bcube":
         cs = bcube_constraints(n)
-        topo = optimize_topology(n, args.r, "constraint", cs=cs, cfg=cfg)
+        req = TopologyRequest(n=n, r=args.r, scenario="constraint", cs=cs)
     else:  # pods
         cs = pod_boundary_constraints(n, args.pods, args.cross_pod_cap)
-        topo = optimize_topology(n, args.r, "constraint", cs=cs, cfg=cfg)
+        req = TopologyRequest(n=n, r=args.r, scenario="constraint", cs=cs)
+    res = solve_topology(req, cfg=cfg, budget_ms=args.budget_ms)
+    topo = res.topology
 
     W = weight_matrix_from_weights(n, topo.edges, topo.g)
     bw = homo_edge_bandwidth(topo)
@@ -82,6 +89,8 @@ def main() -> None:
         "name": topo.name,
         "n": n, "edges": len(topo.edges),
         "r_asym": topo.r_asym(),
+        "quality_tier": res.quality_tier,
+        "complete": res.complete,
         "max_degree": int(np.max(np.count_nonzero(W - np.diag(np.diag(W)), axis=1))),
         "b_min_GBs": min_edge_bandwidth(bw),
         "t_iter_ms": t_iter(min_edge_bandwidth(bw)),

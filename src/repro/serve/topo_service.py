@@ -56,20 +56,24 @@ eval_s``) and the service adds ``queue_s``/``solve_s``.
 from __future__ import annotations
 
 import hashlib
-import itertools
+import json
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Callable
 
 import numpy as np
 
+from ..core.anytime import (
+    PhaseProfile, TopologyRequest, resolve_scenario, solve_topology,
+    validate_request,
+)
 from ..core.api import (
     BATopoConfig, _anneal_edges, _candidate_items, _finalize_batch,
     _homo_degree_targets, _init_graph, _pack_warm, _pick_best,
-    optimize_topology,
 )
-from ..core.constraints import ConstraintSet
+from ..core.constraints import ConstraintSet  # noqa: F401 — public re-export
 from ..core.graph import Topology, all_edges, is_connected
 from ..core.guard import (
     GuardPolicy, check_invariants, classic_fallback, jittered_warm_rungs,
@@ -84,7 +88,9 @@ __all__ = ["ServicePolicy", "ServiceHooks", "TopoRequest", "TopoResponse",
 #: Degradation order: best answer first, closed-form last resort last.
 QUALITY_TIERS = ("cache", "full", "warm", "sa_only", "classic")
 
-_req_counter = itertools.count(1)
+#: The service request IS the unified request dataclass (DESIGN.md §17) —
+#: same fields, same auto-assigned ``request_id``, one validation path.
+TopoRequest = TopologyRequest
 
 
 @dataclass(frozen=True)
@@ -103,6 +109,10 @@ class ServicePolicy:
     ``ema_alpha``: EMA smoothing for the per-(tier, n) latency estimates.
     ``pad_pow2``: pad bucketed solve batches to the next power of two so
     recurring bucket sizes reuse vmap compilations.
+    ``ema_seed``: seed the per-(tier, n) latency EMAs and the anytime
+    per-phase estimates from the tracked BENCH_admm.json pipeline rows at
+    construction, so the first requests after process start don't
+    mispredict the full tier (they previously started cold).
     """
 
     max_queue: int = 32
@@ -113,6 +123,7 @@ class ServicePolicy:
     deadline_safety: float = 1.5
     ema_alpha: float = 0.3
     pad_pow2: bool = True
+    ema_seed: bool = True
 
 
 @dataclass
@@ -130,19 +141,6 @@ class ServiceHooks:
     warm: Callable | None = None
     sa: Callable | None = None
     classic: Callable | None = None
-
-
-@dataclass(frozen=True)
-class TopoRequest:
-    """One admission-controlled optimization request."""
-
-    n: int
-    r: int
-    scenario: str = "homo"
-    node_bandwidths: np.ndarray | None = None
-    cs: ConstraintSet | None = None
-    deadline_ms: float | None = None
-    request_id: int = field(default_factory=lambda: next(_req_counter))
 
 
 @dataclass
@@ -174,6 +172,17 @@ class _CacheEntry:
     hits: int = 0
 
 
+def _load_bench_rows() -> list[dict] | None:
+    """Tracked BENCH_admm.json rows (repo root), or None outside a checkout
+    / on any read problem — EMA seeding is best-effort."""
+    path = Path(__file__).resolve().parents[3] / "BENCH_admm.json"
+    try:
+        rows = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    return rows if isinstance(rows, list) else None
+
+
 class TopologyService:
     """Admission-controlled, deadline-aware, fault-tolerant topology oracle.
 
@@ -187,17 +196,44 @@ class TopologyService:
 
     def __init__(self, cfg: BATopoConfig | None = None,
                  policy: ServicePolicy | None = None,
-                 hooks: ServiceHooks | None = None):
+                 hooks: ServiceHooks | None = None,
+                 bench_rows: list[dict] | None = None):
         self.cfg = cfg or BATopoConfig()
         self.policy = policy or ServicePolicy()
         self.hooks = hooks or ServiceHooks()
         self._queue: list[tuple[TopoRequest, float]] = []   # (req, t_submit)
         self._cache: OrderedDict[tuple, _CacheEntry] = OrderedDict()
         self._ema_ms: dict[tuple[str, int], float] = {}
+        self._seed_profiles: dict[int, PhaseProfile] = {}
         self.stats = {"submitted": 0, "admitted": 0, "rejected_overload": 0,
                       "rejected_malformed": 0, "cache_hits": 0, "misses": 0,
                       "invalidations": 0, "bucketed_solves": 0,
-                      "degraded": 0, "failed": 0}
+                      "degraded": 0, "failed": 0, "ema_seeded": 0}
+        if self.policy.ema_seed:
+            if bench_rows is None:
+                bench_rows = _load_bench_rows()
+            self._seed_ema(bench_rows or [])
+
+    def _seed_ema(self, rows: list[dict]) -> None:
+        """Prime the cold-start latency estimates from tracked pipeline
+        bench rows: the device-pipeline ``total_s`` becomes the full-tier
+        EMA prior for that n, and the per-phase breakdown becomes the
+        anytime solver's stage-scheduling seed profile."""
+        for row in rows:
+            if row.get("pipeline") != "device" or "n" not in row:
+                continue
+            n = int(row["n"])
+            if "total_s" in row:
+                self._ema_ms.setdefault(("full", n),
+                                        float(row["total_s"]) * 1e3)
+                self.stats["ema_seeded"] += 1
+            prof = PhaseProfile.from_dict(
+                {k: row[k] for k in ("warm_s", "admm_s", "round_s",
+                                     "polish_s", "eval_s") if k in row})
+            if prof.phases:
+                restarts = max(1, int(row.get("restarts", 1)))
+                self._seed_profiles[n] = PhaseProfile(
+                    {k: v / restarts for k, v in prof.phases.items()})
 
     # ------------------------------------------------------------------
     # admission
@@ -240,35 +276,10 @@ class TopologyService:
         return self.drain()[-1]
 
     def _validate(self, req: TopoRequest) -> str | None:
-        """First malformed field of ``req``, or None. Service-level twin of
-        the topology release checklist: bad requests die here, named."""
-        try:
-            n, r = int(req.n), int(req.r)
-        except (TypeError, ValueError):
-            return "n and r must be integers"
-        if n < 2:
-            return f"n={req.n} (need n >= 2)"
-        if r < n - 1:
-            return (f"r={req.r} can never connect n={n} nodes "
-                    f"(need r >= n-1)")
-        if req.scenario not in ("homo", "node", "constraint"):
-            return f"unknown scenario {req.scenario!r}"
-        if req.scenario == "node":
-            if req.node_bandwidths is None:
-                return "scenario='node' requires node_bandwidths"
-            bw = np.asarray(req.node_bandwidths, dtype=np.float64)
-            if bw.shape != (n,):
-                return (f"node_bandwidths shape {bw.shape} != ({n},)")
-            if not np.all(np.isfinite(bw)) or not np.all(bw > 0):
-                return "node_bandwidths must be finite and positive"
-        if req.scenario == "constraint":
-            if req.cs is None:
-                return "scenario='constraint' requires a ConstraintSet"
-            if req.cs.n != n:
-                return f"ConstraintSet.n={req.cs.n} != n={n}"
-        if req.deadline_ms is not None and not (req.deadline_ms > 0):
-            return f"deadline_ms={req.deadline_ms} (need > 0)"
-        return None
+        """First malformed field of ``req``, or None — delegated to the
+        unified ``anytime.validate_request`` path (the service-level twin of
+        the topology release checklist: bad requests die here, named)."""
+        return validate_request(req)
 
     # ------------------------------------------------------------------
     # canonical cache
@@ -386,15 +397,13 @@ class TopologyService:
     # ------------------------------------------------------------------
 
     def _tier_full(self, req: TopoRequest, prof: dict) -> Topology:
-        """The unabridged pipeline — identical call to one-shot
-        ``optimize_topology`` so a fault-free full-tier answer is bit-equal
-        to what the library API returns."""
+        """The unabridged pipeline — the same barrier execution the library
+        API runs, so a fault-free full-tier answer is bit-equal to what
+        one-shot ``solve_topology`` returns."""
         if self.hooks.full is not None:
             return self.hooks.full(req, prof)
-        return optimize_topology(int(req.n), int(req.r),
-                                 scenario=req.scenario, cs=req.cs,
-                                 node_bandwidths=req.node_bandwidths,
-                                 cfg=self.cfg, profile=prof)
+        return solve_topology(req, cfg=self.cfg, profile=prof,
+                              engine="barrier").topology
 
     def _tier_warm(self, req: TopoRequest, prof: dict) -> Topology | None:
         """Guarded warm-started ADMM from the nearest cached support (greedy
@@ -403,15 +412,9 @@ class TopologyService:
         if self.hooks.warm is not None:
             return self.hooks.warm(req, prof)
         n, r = int(req.n), int(req.r)
-        cs, scenario = req.cs, req.scenario
-        if scenario == "node":
-            from ..core.allocation import allocate_edge_capacity, graphical_repair
-            from ..core.constraints import node_level_constraints
-
-            alloc = allocate_edge_capacity(
-                np.asarray(req.node_bandwidths), r)
-            cs = node_level_constraints(n, graphical_repair(alloc.e),
-                                        np.asarray(req.node_bandwidths))
+        scenario = req.scenario
+        cs, _, _ = resolve_scenario(n, r, scenario, req.cs,
+                                    req.node_bandwidths, context="service")
         t0 = time.perf_counter()
         warm = self._nearest_warm(req)
         if warm is None:
@@ -526,11 +529,73 @@ class TopologyService:
         self.stats["degraded"] += sum(r.degraded for r in out)
         return out
 
+    def _process_anytime(self, req: TopoRequest, t_sub: float) -> TopoResponse:
+        """Deadline-driven miss on the anytime pipeline (DESIGN.md §17): the
+        former full→warm→sa_only ladder rungs collapse into ONE budgeted
+        best-so-far solve that degrades continuously — the budget is the
+        remaining deadline, the stage scheduler is seeded from tracked
+        bench phase timings when available, and an expired budget still
+        answers via the solver's internal classic fallback. Never raises."""
+        n = int(req.n)
+        key = self._cache_key(req)
+        queue_s = time.perf_counter() - t_sub
+        remaining = self._remaining_ms(req, t_sub)
+        t0 = time.perf_counter()
+        try:
+            res = solve_topology(req, cfg=self.cfg,
+                                 budget_ms=max(float(remaining), 0.0),
+                                 seed_profile=self._seed_profiles.get(n))
+            topo, tier, reason = res.topology, res.quality_tier, res.reason
+            prof = {"queue_s": queue_s, **res.profile.to_dict()}
+        except Exception as exc:  # noqa: BLE001 — terminal guard, never raise
+            topo, tier = None, None
+            reason = f"anytime: {type(exc).__name__}: {exc}"
+            prof = {"queue_s": queue_s}
+        solve_s = time.perf_counter() - t0
+        self._record_ms(tier or "full", n, solve_s * 1e3)
+        if topo is not None and check_invariants(topo) is None:
+            prof["solve_s"] = solve_s
+            self._cache_store(req, key, topo)
+            return TopoResponse(
+                req.request_id, "ok", topology=topo, quality_tier=tier,
+                reason=reason,
+                latency_ms=(time.perf_counter() - t_sub) * 1e3, profile=prof)
+        if topo is not None:
+            bad = check_invariants(topo)
+            reason = f"{reason}; anytime: invalid topology ({bad} violated)" \
+                if reason else f"anytime: invalid topology ({bad} violated)"
+        # terminal rescue: the closed-form classic (always answers)
+        try:
+            topo = (self.hooks.classic(req, prof) if self.hooks.classic
+                    else classic_fallback(
+                        n, int(req.r),
+                        req.cs if req.scenario != "homo" else None))
+            if check_invariants(topo) is None:
+                prof["solve_s"] = time.perf_counter() - t0
+                self._cache_store(req, key, topo)
+                return TopoResponse(
+                    req.request_id, "ok", topology=topo,
+                    quality_tier="classic", reason=reason,
+                    latency_ms=(time.perf_counter() - t_sub) * 1e3,
+                    profile=prof)
+        except Exception as exc:  # noqa: BLE001
+            reason = f"{reason}; classic: {type(exc).__name__}: {exc}"
+        self.stats["failed"] += 1
+        return TopoResponse(
+            req.request_id, "rejected",
+            reason=f"all tiers failed: {reason}",
+            latency_ms=(time.perf_counter() - t_sub) * 1e3, profile=prof)
+
     def _process_single(self, req: TopoRequest, t_sub: float) -> TopoResponse:
-        """Walk the deadline ladder for one cache miss. Never raises: every
-        tier failure is recorded in the reason trail and the next rung runs;
-        if even the classic fallback fails, the request is rejected with the
-        full trail."""
+        """Walk the deadline ladder for one cache miss (fault-injection
+        hooks and undeadlined requests); deadlined requests without
+        optimizer hooks route through :meth:`_process_anytime` instead.
+        Never raises: every tier failure is recorded in the reason trail
+        and the next rung runs; if even the classic fallback fails, the
+        request is rejected with the full trail."""
+        if (req.deadline_ms is not None and self.hooks.full is None
+                and self.hooks.warm is None and self.hooks.sa is None):
+            return self._process_anytime(req, t_sub)
         n = int(req.n)
         key = self._cache_key(req)
         prof: dict = {"queue_s": time.perf_counter() - t_sub}

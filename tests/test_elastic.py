@@ -255,6 +255,42 @@ def test_reopt_failure_keeps_incumbent_with_reason(setup, monkeypatch):
     assert keep and "cold" in keep[0]["reason"]
 
 
+def test_reopt_budget_window_passes_budget_ms(setup, monkeypatch):
+    """reopt_budget="window" budgets the re-solve to the adoption window
+    (lag x modeled fault-free round time); a float passes through as-is;
+    the default stays unbudgeted (budget_ms=None)."""
+    cfg, topo, opt_update, state, dc, step_fn = setup
+    import repro.dsgd.elastic as elastic_mod
+    from repro.dsgd.elastic import fault_free_round_ms
+
+    captured = []
+
+    def capture_reopt(incumbent, **kw):
+        captured.append(kw)
+        return ReoptResult(topology=incumbent, reoptimized=False, attempts=1,
+                           fallback_reason="stub", time_to_reopt_s=0.0,
+                           r_asym_before=0.5, r_asym_after=0.5)
+
+    monkeypatch.setattr(elastic_mod, "reoptimize_topology", capture_reopt)
+    for budget, lag in ((None, 1), ("window", 2), (123.5, 1)):
+        spec = ElasticSpec(chaos=drifting_chaos(6),
+                           drift=DriftPolicy(cooldown_steps=6),
+                           reopt_budget=budget, activation_lag_steps=lag)
+        rt = ElasticRuntime(cfg, spec, topo, opt_update, step_fn=step_fn)
+        es = rt.make_state(topo)
+        st = state
+        for t in range(6):
+            st, _, _ = rt.round(st, es, batch_at(dc, t))
+        assert es.reopts == 1
+
+    none_kw, window_kw, float_kw = captured
+    assert none_kw["budget_ms"] is None
+    assert float_kw["budget_ms"] == 123.5
+    bw = window_kw["node_bandwidths"]        # drifted profile at the trigger
+    expected = 2 * fault_free_round_ms(topo, np.asarray(bw))
+    assert window_kw["budget_ms"] == pytest.approx(expected)
+
+
 def test_elastic_state_extras_roundtrip(setup):
     cfg, topo, opt_update, state, dc, step_fn = setup
     spec = ElasticSpec(chaos=drifting_chaos(8), activation_lag_steps=3)

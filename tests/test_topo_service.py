@@ -249,3 +249,39 @@ def test_profile_dict_carries_phase_latency():
     for key in ("queue_s", "solve_s", "warm_s", "admm_s", "round_s",
                 "polish_s", "eval_s"):
         assert key in resp.profile, key
+
+
+# =========================================================================
+# EMA seeding from tracked bench rows (DESIGN.md §17)
+# =========================================================================
+
+def test_ema_seeded_from_tracked_pipeline_rows():
+    rows = [
+        {"bench": "pipeline", "n": 64, "pipeline": "device", "restarts": 4,
+         "total_s": 8.0, "warm_s": 0.6, "admm_s": 5.8, "round_s": 0.004,
+         "polish_s": 1.6, "eval_s": 0.004},
+        {"bench": "pipeline", "n": 64, "pipeline": "host", "total_s": 30.0},
+        {"bench": "admm", "n": 16, "ms_per_iter": 1.0},   # not a pipeline row
+    ]
+    svc = TopologyService(cfg=SVC_CFG, bench_rows=rows)
+    assert svc.stats["ema_seeded"] == 1
+    assert svc._ema_ms[("full", 64)] == pytest.approx(8000.0)
+    # the per-phase seed profile is per restart (stage-invocation priors)
+    prof = svc._seed_profiles[64]
+    assert prof.phases["warm"] == pytest.approx(0.15)
+    assert prof.phases["admm"] == pytest.approx(1.45)
+
+
+def test_ema_seeding_opt_out_and_live_updates_win():
+    rows = [{"bench": "pipeline", "n": 16, "pipeline": "device",
+             "restarts": 1, "total_s": 4.0, "warm_s": 1.0}]
+    svc = TopologyService(cfg=SVC_CFG,
+                          policy=ServicePolicy(ema_seed=False),
+                          bench_rows=rows)
+    assert svc.stats["ema_seeded"] == 0 and not svc._ema_ms
+    # seeded prior is a default, not a pin: a real solve replaces it
+    svc2 = TopologyService(cfg=SVC_CFG, bench_rows=rows)
+    assert svc2._ema_ms[("full", 16)] == pytest.approx(4000.0)
+    resp = svc2.request(16, 32)
+    assert resp.ok
+    assert svc2._ema_ms[("full", 16)] != pytest.approx(4000.0)
